@@ -1,0 +1,34 @@
+"""Paper Fig. 15 — component ablation: pruning-only, refresh-only,
+combined.  Expected structure: pruning gives most of the accuracy-
+preserving savings; refresh adds savings at a larger quality cost;
+combined is the biggest win."""
+from __future__ import annotations
+
+from .common import csv_row, run_mode
+
+MODES = ["fullcomp", "prune_only", "refresh_only", "codecflow"]
+
+
+def run(emit) -> dict:
+    base = run_mode("fullcomp")
+    out = {}
+    for mode in MODES:
+        r = base if mode == "fullcomp" else run_mode(mode)
+        out[mode] = {
+            "speedup": base["latency_per_window"] / max(r["latency_per_window"], 1e-9),
+            "flop_reduction": 1 - r["flops_total"] / base["flops_total"],
+            "f1": r["f1"],
+        }
+        emit(csv_row(
+            f"ablation/{mode}", r["latency_per_window"] * 1e6,
+            f"speedup={out[mode]['speedup']:.2f}x "
+            f"flops=-{out[mode]['flop_reduction']*100:.0f}% f1={r['f1']:.2f}",
+        ))
+    combined_best = (
+        out["codecflow"]["flop_reduction"]
+        >= max(out["prune_only"]["flop_reduction"],
+               out["refresh_only"]["flop_reduction"]))
+    emit(csv_row("ablation/structure", 0.0,
+                 f"combined_saves_most={combined_best}"))
+    out["combined_saves_most"] = combined_best
+    return out

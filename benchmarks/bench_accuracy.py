@@ -1,0 +1,34 @@
+"""Paper Fig. 12 — Precision / Recall / F1 per system variant, plus the
+output-agreement metric (optimized vs Full-Comp decisions on identical
+inputs), which isolates the serving system's approximation error from
+tiny-model quality."""
+from __future__ import annotations
+
+from repro.serving.metrics import agreement
+
+from .common import csv_row, run_mode
+
+MODES = ["fullcomp", "cacheblend", "vlcache", "prune_only",
+         "refresh_only", "codecflow"]
+
+
+def run(emit) -> dict:
+    base = run_mode("fullcomp")
+    out = {}
+    base_answers = [a for ws in base["window_answers"] for a in ws]
+    for mode in MODES:
+        r = base if mode == "fullcomp" else run_mode(mode)
+        answers = [a for ws in r["window_answers"] for a in ws]
+        agr = agreement(answers, base_answers)
+        out[mode] = {"precision": r["precision"], "recall": r["recall"],
+                     "f1": r["f1"], "window_agreement_vs_fullcomp": agr}
+        emit(csv_row(
+            f"accuracy/{mode}", 0.0,
+            f"P={r['precision']:.2f} R={r['recall']:.2f} F1={r['f1']:.2f} "
+            f"agree={agr:.2f}",
+        ))
+    out["f1_drop_codecflow"] = out["fullcomp"]["f1"] - out["codecflow"]["f1"]
+    emit(csv_row("accuracy/f1_drop", 0.0,
+                 f"codecflow_drop={out['f1_drop_codecflow']:.3f} "
+                 f"(paper: 0~0.08)"))
+    return out

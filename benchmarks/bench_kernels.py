@@ -1,0 +1,59 @@
+"""Kernel microbenchmarks: us/call of each compute hot-spot's oracle on
+CPU (the Pallas kernels execute only on TPU; interpret mode measures
+Python, not hardware — so the jit'd jnp oracle is what we time here)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.ops import mv_sad, rope_shift, ssd_scan
+
+from .common import csv_row
+
+
+def _timeit(fn, n=10):
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = fn()
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(emit) -> dict:
+    out = {}
+    k = jax.random.PRNGKey(0)
+
+    cur = jax.random.uniform(k, (112, 112)) * 255
+    prev = jnp.roll(cur, (2, 1), (0, 1))
+    f = jax.jit(lambda a, b: mv_sad(a, b, 16, 4))
+    us = _timeit(lambda: f(cur, prev))
+    out["mv_sad"] = us
+    emit(csv_row("kernels/mv_sad_112px_r4", us, "81-candidate full search"))
+
+    kk = jax.random.normal(k, (1, 4096, 8, 128), jnp.bfloat16)
+    d = jnp.full((1, 4096), -100, jnp.int32)
+    f = jax.jit(lambda a, b: rope_shift(a, b))
+    us = _timeit(lambda: f(kk, d))
+    out["rope_shift"] = us
+    emit(csv_row("kernels/rope_shift_4k_kv8", us, "Eq.5 position correction"))
+
+    x = jax.random.normal(k, (1, 1024, 8, 64))
+    la = -jnp.abs(jax.random.normal(k, (1, 1024, 8))) * 0.3
+    b = jax.random.normal(k, (1, 1024, 1, 16))
+    c = jax.random.normal(k, (1, 1024, 1, 16))
+    f = jax.jit(lambda *a: ssd_scan(*a, chunk=128))
+    us = _timeit(lambda: f(x, la, b, c))
+    out["ssd_scan"] = us
+    emit(csv_row("kernels/ssd_scan_1k_h8", us, "chunked state-space duality"))
+
+    q = jax.random.normal(k, (1, 1024, 8, 64), jnp.bfloat16)
+    kv = jax.random.normal(k, (1, 1024, 2, 64), jnp.bfloat16)
+    f = jax.jit(lambda a, b, c: ref.flash_prefill_ref(a, b, c))
+    us = _timeit(lambda: f(q, kv, kv))
+    out["attention"] = us
+    emit(csv_row("kernels/causal_attn_1k_gqa", us, "prefill attention"))
+    return out

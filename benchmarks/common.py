@@ -1,0 +1,122 @@
+"""Shared benchmark stack: tiny trained VLM + synthetic video corpus.
+
+All paper-figure benchmarks evaluate the SAME trained weights on the
+SAME streams across system variants, so differences are attributable to
+the serving system, not the model.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.configs.base import CodecCfg, ModelCfg, ViTCfg
+from repro.data.pipeline import anomaly_dataset
+from repro.data.video import motion_level_spec, generate_video
+from repro.serving import Engine, EngineCfg, precision_recall_f1, video_prediction
+from repro.training.anomaly_task import train_tiny_vlm
+
+CODEC = CodecCfg(gop=4, block=16, search_radius=4, window_frames=16,
+                 stride_frames=4, keep_ratio=0.5, mv_threshold=0.25)
+LM = ModelCfg(name="bench-vlm", family="vlm", n_layers=4, d_model=96,
+              n_heads=4, n_kv=2, d_ff=192, vocab=64, tied_embeddings=True)
+VIT = ViTCfg(n_layers=2, d_model=96, n_heads=4, d_ff=192, patch=14,
+             image=112, group=2)
+CKPT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                    "tiny_vlm.npz")
+
+
+@functools.lru_cache(maxsize=1)
+def trained_stack():
+    os.makedirs(os.path.dirname(CKPT), exist_ok=True)
+    lm_params, vit_params = train_tiny_vlm(
+        LM, VIT, CODEC, n_videos=36, n_frames=28, steps=250, batch=16,
+        cache_path=CKPT, verbose=True,
+    )
+    return lm_params, vit_params
+
+
+@functools.lru_cache(maxsize=4)
+def eval_videos(n: int = 6, n_frames: int = 28, seed: int = 100):
+    return tuple(
+        (frames, label)
+        for frames, label in anomaly_dataset(n, n_frames, VIT.image,
+                                             VIT.image, seed=seed)
+    )
+
+
+def make_engine(mode: str, codec: CodecCfg = CODEC) -> Engine:
+    lm_params, vit_params = trained_stack()
+    return Engine(LM, VIT, lm_params, vit_params,
+                  EngineCfg(mode=mode, codec=codec))
+
+
+def run_mode(mode: str, codec: CodecCfg = CODEC, videos=None) -> Dict:
+    """Aggregate one system variant over the eval corpus."""
+    videos = videos if videos is not None else eval_videos()
+    eng = make_engine(mode, codec)
+    # warmup: first stream traces the jitted paths (fresh-prefill window
+    # and selective windows); wall-clock stats below are trace-free
+    eng.run_stream(np.asarray(videos[0][0]))
+    preds, truths = [], []
+    agg = dict(flops_vit=0.0, flops_prefill=0.0, flops_decode=0.0,
+               t_codec=0.0, t_vit=0.0, t_prefill=0.0, t_decode=0.0,
+               tokens=0, tokens_valid=0, patches=0, refreshed=0, windows=0)
+    window_answers = []
+    lat_samples = []
+    for frames, label in videos:
+        res = eng.run_stream(np.asarray(frames))
+        answers = [r.answer for r in res]
+        window_answers.append(answers)
+        preds.append(video_prediction(answers))
+        truths.append(label)
+        for r in res:
+            agg["flops_vit"] += r.flops_vit
+            agg["flops_prefill"] += r.flops_prefill
+            agg["flops_decode"] += r.flops_decode
+            agg["t_codec"] += r.t_codec
+            agg["t_vit"] += r.t_vit
+            agg["t_prefill"] += r.t_prefill
+            agg["t_decode"] += r.t_decode
+            agg["tokens"] += r.tokens_vis
+            agg["tokens_valid"] += r.tokens_valid
+            agg["patches"] += r.vit_patches
+            agg["refreshed"] += r.tokens_refreshed
+            agg["windows"] += 1
+            lat_samples.append(r.t_vit + r.t_prefill + r.t_decode)
+    p, r, f1 = precision_recall_f1(preds, truths)
+    w = max(agg["windows"], 1)
+    return {
+        "mode": mode,
+        "precision": p, "recall": r, "f1": f1,
+        "preds": preds, "window_answers": window_answers,
+        "flops_total": agg["flops_vit"] + agg["flops_prefill"] + agg["flops_decode"],
+        "flops_vit": agg["flops_vit"], "flops_prefill": agg["flops_prefill"],
+        "latency_per_window": float(np.median(lat_samples)),
+        "t_vit": agg["t_vit"] / w, "t_prefill": agg["t_prefill"] / w,
+        "t_decode": agg["t_decode"] / w, "t_codec": agg["t_codec"] / w,
+        "tokens_per_window": agg["tokens_valid"] / w,
+        "patches_per_window": agg["patches"] / w,
+        "refreshed_per_window": agg["refreshed"] / w,
+        "windows": agg["windows"],
+    }
+
+
+def motion_videos(level: str, n: int = 3, n_frames: int = 28, seed: int = 50):
+    out = []
+    for i in range(n):
+        spec = motion_level_spec(level, seed=seed + i, n_frames=n_frames,
+                                 height=VIT.image, width=VIT.image,
+                                 anomaly=(i % 2 == 0),
+                                 anomaly_start=8, anomaly_len=10)
+        frames, labels = generate_video(spec)
+        out.append((frames, int(labels.any())))
+    return out
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,65 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only latency accuracy
+
+Prints ``name,us_per_call,derived`` CSV rows and writes the full JSON to
+experiments/bench_results.json.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import os
+import time
+import traceback
+
+BENCHES = [
+    ("kernels", "benchmarks.bench_kernels", "microbenchmarks"),
+    ("latency", "benchmarks.bench_latency", "Fig. 11"),
+    ("accuracy", "benchmarks.bench_accuracy", "Fig. 12"),
+    ("resources", "benchmarks.bench_resources", "Fig. 13"),
+    ("motion", "benchmarks.bench_motion_levels", "Fig. 14"),
+    ("ablation", "benchmarks.bench_ablation", "Fig. 15"),
+    ("sensitivity", "benchmarks.bench_sensitivity", "Figs. 16-18"),
+    ("overhead", "benchmarks.bench_overhead", "Fig. 19"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--out", default="experiments/bench_results.json")
+    args = ap.parse_args()
+
+    rows = []
+
+    def emit(row: str) -> None:
+        rows.append(row)
+        print(row, flush=True)
+
+    print("name,us_per_call,derived")
+    results = {}
+    for name, module, figure in BENCHES:
+        if args.only and name not in args.only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ({figure}) ---", flush=True)
+        try:
+            mod = importlib.import_module(module)
+            results[name] = mod.run(emit)
+            results[name + "_wall_s"] = round(time.time() - t0, 1)
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            results[name] = {"error": traceback.format_exc(limit=3)}
+            print(f"{name},0.0,ERROR", flush=True)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Render the roofline table from dry-run results as markdown.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+    PYTHONPATH=src python examples/roofline_report.py
+"""
+import json
+import os
+import sys
+
+PATH = sys.argv[1] if len(sys.argv) > 1 else "experiments/roofline.json"
+
+if not os.path.exists(PATH):
+    raise SystemExit(f"{PATH} missing — run repro.launch.dryrun first")
+
+rows = json.load(open(PATH))
+hdr = ("| arch | shape | mesh | peak GiB/dev | t_compute | t_memory "
+       "| t_collective | dominant | MODEL/HLO |")
+print(hdr)
+print("|" + "---|" * 9)
+for r in rows:
+    if not r["ok"]:
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — "
+              f"| {r['error'][:40]} | — |")
+        continue
+    print(
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+        f"| {r['peak_GiB_per_device']:.2f} "
+        f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} "
+        f"| {r['t_collective_s']:.2e} | **{r['dominant']}** "
+        f"| {r['useful_ratio']:.2f} |"
+    )

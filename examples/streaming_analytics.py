@@ -1,0 +1,76 @@
+"""End-to-end serving driver: batched multi-stream video analytics.
+
+    PYTHONPATH=src python examples/streaming_analytics.py [--mode codecflow]
+
+The paper's deployment scenario: N concurrent CCTV streams served by one
+engine; windows are replayed in arrival order (streaming request
+generation, paper §5), decisions and per-stage costs reported per system
+variant.  This is the serving analogue of 'train a 100M model': the
+complete production path — codec, motion analysis, pruned ViT, selective
+KVC refresh, decode — on every window of every stream.
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs.base import CodecCfg
+from repro.data.pipeline import anomaly_dataset
+from repro.launch.serve import build_engine
+from repro.serving import precision_recall_f1, video_prediction
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="codecflow",
+                    choices=["codecflow", "fullcomp", "prune_only",
+                             "refresh_only", "cacheblend", "vlcache"])
+    ap.add_argument("--arch", default="internvl3-14b-smoke")
+    ap.add_argument("--streams", type=int, default=4)
+    ap.add_argument("--frames", type=int, default=24)
+    args = ap.parse_args()
+
+    codec = CodecCfg(gop=4, window_frames=8, stride_frames=4, keep_ratio=0.5)
+    engine = build_engine(args.arch, args.mode, codec)
+    streams = anomaly_dataset(args.streams, args.frames, 112, 112, seed=42)
+
+    # streaming replay: interleave windows across streams (arrival order)
+    sessions = [
+        {"frames": f, "label": l, "answers": [], "state": None, "k": 0}
+        for f, l in streams
+    ]
+    t0 = time.time()
+    total_flops = 0.0
+    # pre-encode every stream once (single-pass codec front end)
+    from repro.codec import StreamDecoder, encode_stream
+    import jax.numpy as jnp
+
+    decoders = []
+    for s in sessions:
+        bs, md = encode_stream(jnp.asarray(s["frames"], jnp.float32), codec)
+        dec = StreamDecoder(codec)
+        dec.ingest(bs, md)
+        decoders.append(dec)
+
+    n_windows = min(d.n_windows() for d in decoders)
+    for k in range(n_windows):
+        for i, s in enumerate(sessions):
+            wframes, wmeta = decoders[i].window(k)
+            stats, s["state"] = engine.serve_window(
+                k, jnp.asarray(wframes), wmeta, s["state"])
+            s["answers"].append(stats.answer)
+            total_flops += stats.flops_vit + stats.flops_prefill + stats.flops_decode
+
+    preds = [video_prediction(s["answers"]) for s in sessions]
+    truths = [s["label"] for s in sessions]
+    p, r, f1 = precision_recall_f1(preds, truths)
+    wall = time.time() - t0
+    print(f"mode={args.mode} arch={args.arch}")
+    print(f"streams={len(sessions)} windows/stream={n_windows} "
+          f"wall={wall:.1f}s ({wall / (len(sessions) * n_windows):.2f}s/window)")
+    print(f"decisions={preds} truths={truths}  P={p:.2f} R={r:.2f} F1={f1:.2f}")
+    print(f"total GFLOP={total_flops / 1e9:.2f}")
+
+
+if __name__ == "__main__":
+    main()

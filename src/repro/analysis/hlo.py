@@ -1,0 +1,99 @@
+"""HLO-text analysis: collective-traffic extraction.
+
+``cost_analysis()`` does not report collective bytes, so we parse the
+compiled (SPMD, per-partition) HLO: for every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute instruction we sum the
+operand sizes (and separately the result sizes).  Operands are printed
+by name only in the compiled module, so a first pass builds the
+name -> shape table from instruction definitions.  Shapes in the SPMD
+module are per-device; callers multiply by chip count for global terms.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[^)=]*?\)?)\s*[\w\-]+\(")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(([^)]*)\)"
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_table(hlo_text: str) -> Dict[str, int]:
+    table: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        m = re.match(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$", line)
+        if not m:
+            continue
+        name, rest = m.groups()
+        # result type is everything before the opcode's '('; take the
+        # shape literals appearing before the first '(' conservatively
+        head = rest.split("(", 1)[0]
+        b = _shape_bytes(head)
+        if b == 0 and rest.startswith("("):
+            # tuple-typed result: shapes inside the leading parens
+            b = _shape_bytes(rest.split(")", 1)[0])
+        if b:
+            table[name] = b
+    return table
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-op-kind operand/result byte totals (per-device shapes).
+
+    ``-done`` halves of async pairs are skipped (counted at ``-start``).
+    """
+    table = _shape_table(hlo_text)
+    out = defaultdict(lambda: {"operand_bytes": 0.0, "result_bytes": 0.0,
+                               "count": 0})
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        _name, result_part, op, suffix, operand_part = m.groups()
+        if suffix == "-done":
+            continue
+        operand_bytes = _shape_bytes(operand_part)
+        if operand_bytes == 0:
+            for tok in operand_part.split(","):
+                tok = tok.strip().lstrip("%")
+                operand_bytes += table.get(tok, 0)
+        out[op]["operand_bytes"] += operand_bytes
+        out[op]["result_bytes"] += _shape_bytes(result_part)
+        out[op]["count"] += 1
+    return dict(out)
+
+
+def total_collective_bytes(hlo_text: str) -> float:
+    """Sum of operand sizes over every collective (the §Roofline input)."""
+    return sum(v["operand_bytes"] for v in collective_bytes(hlo_text).values())

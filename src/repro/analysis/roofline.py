@@ -1,0 +1,151 @@
+"""Three-term roofline model from dry-run compiled artifacts.
+
+Hardware: TPU v5e-class — 197 TF/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+    compute   = HLO_FLOPs        / (chips * PEAK_FLOPS)
+    memory    = HLO_bytes        / (chips * HBM_BW)
+    collective= collective_bytes / (chips * LINK_BW)
+
+Methodology note (recorded in EXPERIMENTS.md): XLA's cost analysis
+counts a while-loop body ONCE, so a scan-over-layers model would
+under-report by ~n_layers.  We therefore assemble totals from separately
+lowered components — embed/head (+optimizer for train) once, one lower
+per pattern position multiplied by its repeat count — while the peak
+memory and the compile *proof* come from the full-model compile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from .hlo import collective_bytes, total_collective_bytes
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link
+
+
+@dataclasses.dataclass
+class PartCost:
+    name: str
+    multiplier: int
+    flops: float            # per-device, single instance
+    bytes_accessed: float
+    coll_operand_bytes: float
+    coll_detail: Dict[str, Any]
+
+
+@dataclasses.dataclass
+class Report:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    ok: bool
+    error: str = ""
+    # full-model compile artifacts
+    peak_bytes_per_device: float = 0.0
+    arg_bytes_per_device: float = 0.0
+    compile_seconds: float = 0.0
+    full_collectives: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # assembled per-device totals
+    flops_per_device: float = 0.0
+    bytes_per_device: float = 0.0
+    coll_bytes_per_device: float = 0.0
+    parts: list = dataclasses.field(default_factory=list)
+    # analytic
+    model_flops: float = 0.0
+
+    # ------------------------------------------------------------------
+    @property
+    def hlo_flops_global(self) -> float:
+        return self.flops_per_device * self.chips
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops_global / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device * self.chips / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device * self.chips / (self.chips * LINK_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        return self.model_flops / self.hlo_flops_global if self.hlo_flops_global else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips, "ok": self.ok, "error": self.error,
+            "peak_GiB_per_device": self.peak_bytes_per_device / 2**30,
+            "compile_s": round(self.compile_seconds, 2),
+            "HLO_TFLOPs_global": self.hlo_flops_global / 1e12,
+            "HLO_GB_global": self.bytes_per_device * self.chips / 1e9,
+            "coll_GB_global": self.coll_bytes_per_device * self.chips / 1e9,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "MODEL_TFLOPs": self.model_flops / 1e12,
+            "useful_ratio": round(self.useful_ratio, 4),
+        }
+
+
+def analyze_lowered(lowered, compiled=None) -> Dict[str, float]:
+    """Extract per-device flops / bytes / collective traffic."""
+    compiled = compiled or lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "coll_operand_bytes": total_collective_bytes(txt),
+        "coll_detail": collective_bytes(txt),
+        "compiled": compiled,
+    }
+
+
+def lower_part(
+    fn: Callable, args: tuple, in_shardings, mesh, name: str,
+    multiplier: int, donate_argnums=(),
+) -> PartCost:
+    from ..sharding.ctx import activation_mesh
+    with mesh, activation_mesh(mesh):
+        lowered = jax.jit(
+            fn, in_shardings=in_shardings, donate_argnums=donate_argnums
+        ).lower(*args)
+        d = analyze_lowered(lowered)
+    return PartCost(
+        name=name, multiplier=multiplier, flops=d["flops"],
+        bytes_accessed=d["bytes_accessed"],
+        coll_operand_bytes=d["coll_operand_bytes"],
+        coll_detail={k: v["operand_bytes"] for k, v in d["coll_detail"].items()},
+    )
+
+
+def assemble(report: Report, parts: list) -> Report:
+    report.parts = [dataclasses.asdict(p) for p in parts]
+    report.flops_per_device = sum(p.flops * p.multiplier for p in parts)
+    report.bytes_per_device = sum(p.bytes_accessed * p.multiplier for p in parts)
+    report.coll_bytes_per_device = sum(
+        p.coll_operand_bytes * p.multiplier for p in parts
+    )
+    return report

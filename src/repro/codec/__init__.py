@@ -1,0 +1,9 @@
+from .metadata import Bitstream, CodecMetadata, I_FRAME, P_FRAME, gop_frame_types
+from .encoder import encode_stream, motion_compensate, estimate_bits
+from .decoder import decode_stream, StreamDecoder, NaiveDecoder
+
+__all__ = [
+    "Bitstream", "CodecMetadata", "I_FRAME", "P_FRAME", "gop_frame_types",
+    "encode_stream", "motion_compensate", "estimate_bits",
+    "decode_stream", "StreamDecoder", "NaiveDecoder",
+]

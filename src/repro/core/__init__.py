@@ -1,0 +1,23 @@
+"""CodecFlow core: the paper's primary contribution.
+
+Motion Analyzer (Eq. 1-3) -> Token Pruner (Eq. 4, GOP accumulation,
+group-complete capacity selection) -> KVC Reuser (Eq. 5 position
+correction) -> KVC Refresher (anchor-token selective refresh).
+"""
+from .motion import motion_mask, block_to_patch
+from .pruning import (
+    PruneDecision, select_tokens, full_decision, capacity_groups,
+    pruning_stats, group_mask,
+)
+from .kvc import (
+    WindowLayout, shift_cache, reuse_caches, shift_valid,
+    selective_refresh, full_prefill,
+)
+
+__all__ = [
+    "motion_mask", "block_to_patch",
+    "PruneDecision", "select_tokens", "full_decision", "capacity_groups",
+    "pruning_stats", "group_mask",
+    "WindowLayout", "shift_cache", "reuse_caches", "shift_valid",
+    "selective_refresh", "full_prefill",
+]

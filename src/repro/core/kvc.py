@@ -1,0 +1,247 @@
+"""Selective KV-cache reuse + refresh across sliding windows (paper §3.4).
+
+Components 4 (KVC Reuser) and 5 (KVC Refresher) of Fig. 8:
+
+  * ``WindowLayout`` — static token geometry of a window.  Requires
+    ``stride % gop == 0`` so every window starts on an I-frame (the paper
+    explicitly aligns the I-frame with the start of the overlap region,
+    §3.4.1); then frame types, token offsets, anchor positions and the
+    shift amount are all compile-time constants.
+  * ``reuse_caches`` — Position-consistent reuse (§3.4.2): overlap KV
+    entries are moved to their new positions and keys are rotated by
+    Eq. 5 (``rope_shift`` Pallas kernel); values are reused verbatim.
+  * ``selective_refresh`` — Critical-token refresh (§3.4.1): I-frame
+    anchor tokens + new-stride tokens + query tokens are recomputed
+    through the LLM prefill path (scatter-mode attention), reading the
+    reused cache for everything else.
+
+Applicability: this module is the attention-family mechanism.  SSM and
+hybrid families use boundary-state streaming instead (DESIGN.md §4,
+``repro.serving.engine``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import CodecCfg, ModelCfg, ViTCfg
+from ..kernels import ops
+from ..models import transformer as tfm
+from ..models.layers import KVCache
+from ..models import layers
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowLayout:
+    """Static token geometry of a sliding window.
+
+    Token order: [frame_0 tokens, ..., frame_{w-1} tokens, query tokens].
+    Frame f contributes ``g_tokens`` if it is an I-frame (f % gop == 0,
+    fully encoded) else ``k_tokens`` (pruning capacity).
+    """
+
+    window: int          # w: frames per window
+    stride: int          # s: frames advanced per step
+    gop: int
+    g_tokens: int        # tokens for a fully-encoded frame (n_groups)
+    k_tokens: int        # capacity tokens for a pruned P-frame
+    query_len: int
+
+    def __post_init__(self):
+        assert self.stride % self.gop == 0, (
+            "stride must be a GOP multiple so every window starts on an "
+            f"I-frame (got s={self.stride}, gop={self.gop})"
+        )
+        assert self.window % self.gop == 0, (self.window, self.gop)
+
+    # -- static geometry ------------------------------------------------
+    def frame_is_i(self, f: int) -> bool:
+        return f % self.gop == 0
+
+    @functools.cached_property
+    def frame_tokens(self) -> Tuple[int, ...]:
+        return tuple(
+            self.g_tokens if self.frame_is_i(f) else self.k_tokens
+            for f in range(self.window)
+        )
+
+    @functools.cached_property
+    def frame_offsets(self) -> Tuple[int, ...]:
+        off, out = 0, []
+        for n in self.frame_tokens:
+            out.append(off)
+            off += n
+        return tuple(out)
+
+    @property
+    def vis_len(self) -> int:
+        return sum(self.frame_tokens)
+
+    @property
+    def total_len(self) -> int:
+        return self.vis_len + self.query_len
+
+    @property
+    def shift_tokens(self) -> int:
+        """Token count of the first ``stride`` frames (= position delta)."""
+        return sum(self.frame_tokens[: self.stride])
+
+    @property
+    def overlap_tokens(self) -> int:
+        return self.vis_len - self.shift_tokens
+
+    @functools.cached_property
+    def anchor_token_idx(self) -> np.ndarray:
+        """New-window positions of overlap-region I-frame tokens."""
+        idx = []
+        for f in range(0, self.window - self.stride, self.gop):
+            assert self.frame_is_i(f)
+            off = self.frame_offsets[f]
+            idx.extend(range(off, off + self.g_tokens))
+        return np.asarray(idx, np.int32)
+
+    @functools.cached_property
+    def refresh_token_idx(self) -> np.ndarray:
+        """Refresh set: anchors + new-stride tokens + query tokens."""
+        new_start = self.overlap_tokens
+        tail = np.arange(new_start, self.total_len, dtype=np.int32)
+        return np.concatenate([self.anchor_token_idx, tail])
+
+    @property
+    def n_refresh(self) -> int:
+        return len(self.refresh_token_idx)
+
+    def frame_token_slice(self, f: int) -> slice:
+        return slice(self.frame_offsets[f], self.frame_offsets[f] + self.frame_tokens[f])
+
+
+# ======================================================================
+# KVC Reuser (position-consistent reuse, Eq. 5)
+# ======================================================================
+def shift_cache(
+    cache: KVCache, layout: WindowLayout, rope_theta: float
+) -> KVCache:
+    """Move overlap KV to the new window's coordinates.
+
+    old positions [shift, vis_len) -> new [0, overlap); keys rotated by
+    R(-shift) (Eq. 5), values copied.  Slots >= overlap are left stale —
+    the refresh pass overwrites / the validity mask hides them.
+    """
+    sh, ov, vl = layout.shift_tokens, layout.overlap_tokens, layout.vis_len
+    B = cache.k.shape[0]
+    k_over = cache.k[:, sh:vl]
+    v_over = cache.v[:, sh:vl]
+    delta = jnp.full((B, ov), -sh, jnp.int32)
+    k_corr = ops.rope_shift(k_over, delta, rope_theta)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_corr, 0, 1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_over, 0, 1)
+    return KVCache(new_k, new_v)
+
+
+def reuse_caches(
+    cfg: ModelCfg, caches: tfm.Caches, layout: WindowLayout
+) -> tfm.Caches:
+    """Apply ``shift_cache`` to every attention position in the stack."""
+    new_blocks = []
+    for pos in range(cfg.period):
+        mixer, _ = cfg.block_kind(pos)
+        blk = caches.blocks[pos]
+        if mixer == "attn":
+            R, B = blk.k.shape[:2]
+            flat = KVCache(
+                blk.k.reshape((R * B,) + blk.k.shape[2:]),
+                blk.v.reshape((R * B,) + blk.v.shape[2:]),
+            )
+            shifted = shift_cache(flat, layout, cfg.rope_theta)
+            new_blocks.append(KVCache(
+                shifted.k.reshape(blk.k.shape), shifted.v.reshape(blk.v.shape)
+            ))
+        else:
+            new_blocks.append(blk)
+    return tfm.Caches(tuple(new_blocks), caches.cross)
+
+
+def shift_valid(valid: jnp.ndarray, layout: WindowLayout) -> jnp.ndarray:
+    """Shift the per-token validity mask with the window."""
+    sh, ov = layout.shift_tokens, layout.overlap_tokens
+    moved = valid[:, sh:layout.vis_len]
+    out = jnp.zeros_like(valid)
+    out = out.at[:, :ov].set(moved)
+    return out
+
+
+# ======================================================================
+# KVC Refresher (critical-token refresh)
+# ======================================================================
+def selective_refresh(
+    cfg: ModelCfg,
+    params,
+    caches: tfm.Caches,
+    refresh_embeds: jnp.ndarray,
+    refresh_valid: jnp.ndarray,
+    kv_valid: jnp.ndarray,
+    layout: WindowLayout,
+    *,
+    q_chunk: int = 1024,
+):
+    """Recompute the refresh set against the reused cache.
+
+    Args:
+      caches: output of ``reuse_caches`` (overlap KV already corrected).
+      refresh_embeds: (B, n_refresh, d) input embeddings of the refresh
+        set — cached *visual embeddings* for anchors (the ViT is NOT
+        re-run, §3.4.1) + new-stride visual tokens + query embeddings.
+      refresh_valid: (B, n_refresh) bool.
+      kv_valid: (B, total_len) bool — validity of the full cache AFTER
+        this refresh (shifted old validity with refresh positions set).
+
+    Returns: (last-token logits (B, V), new caches, refresh hiddens).
+    """
+    idx = jnp.asarray(layout.refresh_token_idx)
+    B = refresh_embeds.shape[0]
+    positions = jnp.broadcast_to(idx[None], (B, idx.shape[0]))
+    kv_valid = kv_valid & jnp.ones((B, layout.total_len), bool)
+    # queries at invalid refresh slots produce garbage; mask their keys
+    kv_full = kv_valid.at[:, idx].set(refresh_valid)
+
+    h = refresh_embeds.astype(params["embed"].dtype)
+    h, new_caches, _ = tfm.run_stack(
+        cfg, params, h, positions, None, caches,
+        cache_offset=None, cache_len=layout.total_len,
+        scatter_idx=idx, kv_valid=kv_full, q_chunk=q_chunk,
+    )
+    hn = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = tfm.lm_logits(cfg, params, hn[:, -1])
+    return logits, new_caches, h
+
+
+# ======================================================================
+# Full recompute (the exact baseline the refresh approximates)
+# ======================================================================
+def full_prefill(
+    cfg: ModelCfg,
+    params,
+    embeds: jnp.ndarray,
+    valid: jnp.ndarray,
+    layout: WindowLayout,
+    caches: Optional[tfm.Caches] = None,
+    *,
+    q_chunk: int = 1024,
+):
+    """Recompute the whole window from scratch (Full-Comp / first window)."""
+    B = embeds.shape[0]
+    if caches is None:
+        caches = tfm.init_caches(cfg, B, layout.total_len, embeds.dtype)
+    logits, new_caches, h = tfm.prefill(
+        cfg, params, jnp.zeros((B, layout.total_len), jnp.int32), caches,
+        valid=valid, inputs_embeds=embeds, embed_mask=None,
+        q_chunk=q_chunk,
+    )
+    return logits, new_caches, h

@@ -1,0 +1,72 @@
+"""Motion Analyzer (paper §3.3.1, component 2 in Fig. 8).
+
+Converts compressed-domain block signals into patch-level dynamic masks:
+
+    M_t(i) = V_t(i) + alpha * R_t(i)        (Eq. 3)
+    dynamic(i) = M_t(i) >= tau              (Eq. 4)
+
+with the GOP accumulation policy of §3.3.2: a patch marked dynamic stays
+active until the next I-frame resets the mask; I-frames are always fully
+encoded.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import CodecCfg, ViTCfg
+from ..codec.metadata import CodecMetadata, I_FRAME
+
+F32 = jnp.float32
+
+
+def block_to_patch(grid: jnp.ndarray, patches_per_side: int) -> jnp.ndarray:
+    """Resample a (..., Hb, Wb) block-grid map onto the ViT patch grid.
+
+    Nearest-neighbour resampling (a 16-px macroblock covers ~1.3 14-px
+    patches at 448px; the paper maps 'block-level change signals to
+    patch-level decisions under dynamic rescaling').
+    """
+    *lead, hb, wb = grid.shape
+    pp = patches_per_side
+    ys = (jnp.arange(pp) * hb) // pp
+    xs = (jnp.arange(pp) * wb) // pp
+    return grid[..., ys[:, None], xs[None, :]]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "vit_patches"))
+def motion_mask(
+    meta: CodecMetadata, cfg: CodecCfg, vit_patches: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Patch-level dynamic masks for a window of frames.
+
+    Args:
+      meta: codec metadata for T frames.
+      cfg: codec config (tau, alpha, gop).
+      vit_patches: patches per side of the ViT grid.
+
+    Returns:
+      dynamic: (T, pp, pp) bool — GOP-accumulated dynamic mask (Eq. 4);
+        all-True on I-frames (fully encoded).
+      score: (T, pp, pp) float32 — the raw motion score M_t (Eq. 3),
+        useful for capacity ranking.
+    """
+    mv_mag = meta.mv_magnitude                       # (T, Hb, Wb)
+    m = mv_mag + cfg.alpha * meta.residual           # Eq. 3
+    m_patch = block_to_patch(m, vit_patches)         # (T, pp, pp)
+    is_i = meta.frame_types == I_FRAME               # (T,)
+
+    own = m_patch >= cfg.mv_threshold                # Eq. 4, per-frame
+
+    def accumulate(active, inp):
+        det, i_frame = inp
+        # I-frame: reset accumulation; everything is coded fresh.
+        active = jnp.where(i_frame, jnp.zeros_like(active), active | det)
+        return active, active
+
+    _, acc = jax.lax.scan(accumulate, jnp.zeros_like(own[0]), (own, is_i))
+    dynamic = jnp.where(is_i[:, None, None], True, acc)
+    return dynamic, m_patch

@@ -1,0 +1,109 @@
+"""Token Pruner (paper §3.3.2, component 3 in Fig. 8) — TPU adaptation.
+
+The paper drops a data-dependent number of patches; XLA needs static
+shapes, so pruning here is *capacity-based* (DESIGN.md §3): every
+P-frame contributes exactly ``K_groups = ceil(keep_ratio * n_groups)``
+projector groups, selected by (dynamic-flag, motion-score) ranking with
+a validity mask for the slack.  I-frames are always fully encoded
+(separate full-capacity pass), matching '"I-frames are always fully
+encoded and provide the reference visual context"'.
+
+Group-complete expansion: a 2x2 patch group is retained iff ANY of its
+patches is dynamic, so the pixel-unshuffle projector layout stays valid.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import CodecCfg, ViTCfg
+
+F32 = jnp.float32
+
+
+class PruneDecision(NamedTuple):
+    """Static-shape pruning decision for a stack of frames.
+
+    group_idx: (T, Kg) int32 — selected projector-group indices/frame.
+    group_valid: (T, Kg) bool — mask for slack slots.
+    patch_idx: (T, Kg*g^2) int32 — the constituent patch indices
+      (group-complete), ViT gather order.
+    patch_valid: (T, Kg*g^2) bool.
+    group_dynamic: (T, n_groups) bool — full-grid dynamic map (for
+      stats/benchmarks).
+    """
+
+    group_idx: jnp.ndarray
+    group_valid: jnp.ndarray
+    patch_idx: jnp.ndarray
+    patch_valid: jnp.ndarray
+    group_dynamic: jnp.ndarray
+
+
+def group_mask(dynamic: jnp.ndarray, score: jnp.ndarray, v: ViTCfg):
+    """Patch-level (T, pp, pp) -> group-level (T, n_groups) mask + score."""
+    T = dynamic.shape[0]
+    gs, g = v.groups_per_side, v.group
+    d = dynamic.reshape(T, gs, g, gs, g)
+    s = score.reshape(T, gs, g, gs, g)
+    gd = d.any(axis=(2, 4)).reshape(T, gs * gs)
+    gscore = s.max(axis=(2, 4)).reshape(T, gs * gs)
+    return gd, gscore
+
+
+def capacity_groups(v: ViTCfg, keep_ratio: float) -> int:
+    return max(1, min(v.n_groups, int(-(-keep_ratio * v.n_groups // 1))))
+
+
+@functools.partial(jax.jit, static_argnames=("v", "k_groups"))
+def select_tokens(
+    dynamic: jnp.ndarray, score: jnp.ndarray, v: ViTCfg, k_groups: int
+) -> PruneDecision:
+    """Rank groups by (dynamic, score) and take a static top-K.
+
+    dynamic/score: (T, pp, pp) from ``motion_mask``.
+    """
+    gd, gscore = group_mask(dynamic, score, v)          # (T, G)
+    rank = jnp.where(gd, gscore + 1e6, gscore)          # dynamic first
+    _, idx = jax.lax.top_k(rank, k_groups)              # (T, Kg)
+    valid = jnp.take_along_axis(gd, idx, axis=1)        # only dynamic kept
+
+    # expand to patch indices, group-complete, row-major within group
+    gs, g = v.groups_per_side, v.group
+    gy, gx = idx // gs, idx % gs
+    dy = jnp.arange(g)[:, None]
+    dx = jnp.arange(g)[None, :]
+    py = gy[..., None, None] * g + dy                   # (T, Kg, g, g)
+    px = gx[..., None, None] * g + dx
+    patch = (py * v.patches_per_side + px).reshape(idx.shape[0], -1)
+    pvalid = jnp.repeat(valid, g * g, axis=1)
+    return PruneDecision(idx, valid, patch, pvalid, gd)
+
+
+def full_decision(v: ViTCfg, t: int) -> PruneDecision:
+    """The no-pruning decision (I-frames / Full-Comp baseline)."""
+    G = v.n_groups
+    idx = jnp.broadcast_to(jnp.arange(G)[None], (t, G))
+    valid = jnp.ones((t, G), bool)
+    gs, g = v.groups_per_side, v.group
+    gy, gx = idx // gs, idx % gs
+    py = gy[..., None, None] * g + jnp.arange(g)[:, None]
+    px = gx[..., None, None] * g + jnp.arange(g)[None, :]
+    patch = (py * v.patches_per_side + px).reshape(t, -1)
+    return PruneDecision(idx, valid, patch, jnp.ones_like(patch, bool),
+                         jnp.ones((t, G), bool))
+
+
+def pruning_stats(dec: PruneDecision) -> dict:
+    """Token-reduction accounting (paper Fig. 13/14)."""
+    kept = dec.group_valid.sum()
+    total = dec.group_dynamic.shape[0] * dec.group_dynamic.shape[1]
+    return {
+        "kept_tokens": int(kept),
+        "total_tokens": int(total),
+        "pruned_frac": float(1.0 - kept / total),
+        "dynamic_frac": float(dec.group_dynamic.mean()),
+    }

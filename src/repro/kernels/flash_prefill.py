@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: blockwise causal GQA attention (flash prefill).
+
+The LLM prefill over a sliding window is the dominant cost in the paper's
+pipeline (Fig. 3).  This kernel is the MXU hot path: online-softmax
+attention with q/k/v tiles resident in VMEM, f32 accumulators in scratch,
+and GQA expressed through the k/v BlockSpec index map (q head h reads kv
+head h // group — no materialized broadcast).
+
+Grid: (B, H, Sq/Tq, Sk/Tk) with the key axis innermost; (m, l, acc)
+scratch persists across the key axis (TPU grid minor-to-major execution).
+Causal/sliding-window masking is positional, supporting a nonzero
+``q_offset`` so the same kernel serves chunked prefill against an
+existing cache (CodecFlow's selective refresh path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, tq: int, tk: int, n_k: int, scale: float, causal: bool,
+    window: int | None, q_offset: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale       # (Tq, D)
+    k = k_ref[0, 0].astype(jnp.float32)               # (Tk, D)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                  # (Tq, Tk)
+
+    qpos = iq * tq + jax.lax.iota(jnp.int32, tq)[:, None] + q_offset
+    kpos = ik * tk + jax.lax.iota(jnp.int32, tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_ref[...]                                # (Tq, 1)
+    m_cur = jnp.max(logits, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(logits - m_new)                        # (Tq, Tk)
+    corr = jnp.exp(m_prev - m_new)                     # (Tq, 1)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    v = v_ref[0, 0].astype(jnp.float32)                # (Tk, D)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "tq", "tk", "interpret"),
+)
+def flash_prefill_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    tq: int = 128,
+    tk: int = 128,
+    interpret: bool = False,
+):
+    """Causal GQA attention.  q: (B, Sq, H, D); k, v: (B, Sk, Hkv, D)."""
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = H // Hkv
+    tq = min(tq, Sq)
+    tk = min(tk, Sk)
+    assert Sq % tq == 0 and Sk % tk == 0, (Sq, tq, Sk, tk)
+    n_k = Sk // tk
+    scale = D ** -0.5
+
+    qt = q.transpose(0, 2, 1, 3)                      # (B, H, Sq, D)
+    kt = k.transpose(0, 2, 1, 3)                      # (B, Hkv, Sk, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _flash_kernel, tq=tq, tk=tk, n_k=n_k, scale=scale,
+        causal=causal, window=window, q_offset=q_offset,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, Sq // tq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, tq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, tk, D), lambda b, h, iq, ik: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, tk, D), lambda b, h, iq, ik: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq, 1), jnp.float32),   # running max  m
+            pltpu.VMEM((tq, 1), jnp.float32),   # running norm l
+            pltpu.VMEM((tq, D), jnp.float32),   # accumulator
+        ],
+        interpret=interpret,
+    )
+    return out(qt, kt, vt).transpose(0, 2, 1, 3)

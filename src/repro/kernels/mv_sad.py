@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: full-search block-matching motion estimation.
+
+This is the codec substrate's hot spot — the paper gets motion vectors
+"for free" from NVDEC; on TPU we produce them with a VMEM-resident SAD
+search (DESIGN.md §3).  One grid program handles one row of macroblocks:
+the current-frame block row and the (edge-padded) reference frame stay in
+VMEM, and the (2r+1)^2 candidate displacements are an unrolled VPU loop
+of shifted absolute-difference reductions.
+
+Layout notes (TPU):
+  * the whole padded reference frame is mapped into VMEM once
+    (448x448 f32 ~ 0.8 MB << 16 MB VMEM);
+  * per-candidate work is (block x W) elementwise + a reshape-reduction,
+    both lane-friendly since W is a multiple of the 16-px block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mv_sad_kernel(
+    cur_ref, prev_ref, mvy_ref, mvx_ref, sad_ref, *, block: int, radius: int, w: int
+):
+    wb = w // block
+    n_cand = 2 * radius + 1
+    cur = cur_ref[...]  # (block, W)
+    row0 = pl.program_id(0) * block  # this block-row's origin in the padded ref
+
+    best_sad = jnp.full((wb,), jnp.inf, jnp.float32)
+    best_idx = jnp.zeros((wb,), jnp.int32)
+    for idx in range(n_cand * n_cand):  # unrolled: static candidate count
+        dy, dx = idx // n_cand, idx % n_cand
+        win = prev_ref[pl.dslice(row0 + dy, block), pl.dslice(dx, w)]
+        diff = jnp.abs(cur - win)
+        sads = diff.reshape(block, wb, block).sum(axis=(0, 2))  # (wb,)
+        take = sads < best_sad
+        best_sad = jnp.where(take, sads, best_sad)
+        best_idx = jnp.where(take, idx, best_idx)
+
+    mvy_ref[0, :] = best_idx // n_cand - radius
+    mvx_ref[0, :] = best_idx % n_cand - radius
+    sad_ref[0, :] = best_sad
+
+
+@functools.partial(jax.jit, static_argnames=("block", "radius", "interpret"))
+def mv_sad_pallas(
+    cur: jnp.ndarray,
+    prev: jnp.ndarray,
+    block: int = 16,
+    radius: int = 4,
+    interpret: bool = False,
+):
+    """Block-matching motion search.  See ``ref.mv_sad_ref`` for semantics."""
+    H, W = cur.shape
+    hb, wb = H // block, W // block
+    prev_pad = jnp.pad(prev.astype(jnp.float32), radius, mode="edge")
+
+    kernel = functools.partial(
+        _mv_sad_kernel, block=block, radius=radius, w=W
+    )
+    mvy, mvx, sad = pl.pallas_call(
+        kernel,
+        grid=(hb,),
+        in_specs=[
+            pl.BlockSpec((block, W), lambda i: (i, 0)),
+            # The candidate windows of adjacent block rows overlap by 2r
+            # rows, which BlockSpec striding cannot express — so the whole
+            # padded reference frame is mapped into VMEM once and the
+            # kernel dslices its own (block+2r)-row band.
+            pl.BlockSpec(prev_pad.shape, lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, wb), lambda i: (i, 0)),
+            pl.BlockSpec((1, wb), lambda i: (i, 0)),
+            pl.BlockSpec((1, wb), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((hb, wb), jnp.int32),
+            jax.ShapeDtypeStruct((hb, wb), jnp.int32),
+            jax.ShapeDtypeStruct((hb, wb), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cur.astype(jnp.float32), prev_pad)
+    mv = jnp.stack([mvy, mvx], axis=-1)
+    return mv, sad

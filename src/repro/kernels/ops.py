@@ -1,0 +1,110 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Every op dispatches between the Pallas TPU kernel and the pure-jnp
+oracle in ``ref.py``:
+
+  * on a real TPU backend -> ``pl.pallas_call`` (compiled Mosaic);
+  * elsewhere (this CPU container, dry-run lowering) -> the oracle,
+    unless ``interpret=True`` is requested (kernel body interpreted in
+    Python — how the tests validate the kernels).
+
+The mode can be forced globally with ``set_kernel_mode`` for A/B tests.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_prefill import flash_prefill_pallas
+from .mv_sad import mv_sad_pallas
+from .rope_shift import rope_shift_pallas
+from .ssd_scan import ssd_scan_pallas
+
+_MODE = "auto"  # auto | ref | pallas | interpret
+
+
+def set_kernel_mode(mode: str) -> None:
+    global _MODE
+    assert mode in ("auto", "ref", "pallas", "interpret"), mode
+    _MODE = mode
+
+
+@contextmanager
+def kernel_mode(mode: str):
+    prev = _MODE
+    set_kernel_mode(mode)
+    try:
+        yield
+    finally:
+        set_kernel_mode(prev)
+
+
+def _use_pallas() -> tuple[bool, bool]:
+    """Returns (use_pallas_kernel, interpret)."""
+    if _MODE == "ref":
+        return False, False
+    if _MODE == "interpret":
+        return True, True
+    if _MODE == "pallas":
+        return True, False
+    on_tpu = jax.default_backend() == "tpu"
+    return (True, False) if on_tpu else (False, False)
+
+
+# ----------------------------------------------------------------------
+def mv_sad(cur, prev, block: int = 16, radius: int = 4):
+    use, interp = _use_pallas()
+    if use:
+        return mv_sad_pallas(cur, prev, block=block, radius=radius, interpret=interp)
+    return ref.mv_sad_ref(cur, prev, block, radius)
+
+
+def rope_shift(k, delta, theta: float = 10_000.0):
+    use, interp = _use_pallas()
+    if use:
+        return rope_shift_pallas(k, delta, theta=theta, interpret=interp)
+    return ref.rope_shift_ref(k, delta, theta)
+
+
+def flash_prefill(q, k, v, *, causal=True, window=None, q_offset=0):
+    use, interp = _use_pallas()
+    if use and q.shape[1] % 128 == 0 and k.shape[1] % 128 == 0:
+        return flash_prefill_pallas(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            interpret=interp,
+        )
+    return ref.flash_prefill_ref(
+        q, k, v, causal=causal, window=window, q_offset=q_offset
+    )
+
+
+def ssd_scan(x, log_a, b, c, init_state=None, chunk: int = 128):
+    """x: (B,L,H,P); log_a: (B,L,H); b/c: (B,L,G,N) per-group.
+
+    The time axis is padded to a chunk multiple with identity steps
+    (log_a=0 keeps the state, x=b=0 adds nothing), so any L works.
+    """
+    L = x.shape[1]
+    q = min(chunk, L) if L % chunk else chunk
+    pad = (-L) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    use, interp = _use_pallas()
+    G = b.shape[2]
+    if use:
+        y, st = ssd_scan_pallas(
+            x, log_a, b, c, init_state, chunk=q, n_groups=G,
+            interpret=interp,
+        )
+    elif G == x.shape[2]:
+        y, st = ref.ssd_chunked_scan_ref(x, log_a, b, c, q, init_state)
+    else:
+        # per-group B/C stay factored: no H/G-fold operand broadcast
+        y, st = ref.ssd_chunked_scan_grouped_ref(x, log_a, b, c, q, init_state)
+    return y[:, :L], st

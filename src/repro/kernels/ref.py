@@ -1,0 +1,363 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for correctness tests (``assert_allclose``
+against the ``interpret=True`` kernel execution) and the implementation
+the framework actually runs on CPU / in dry-run lowering (Pallas TPU
+kernels only execute on real TPUs or in interpret mode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------------
+# mv_sad: block-matching motion estimation
+# ----------------------------------------------------------------------
+def mv_sad_ref(cur: jnp.ndarray, prev: jnp.ndarray, block: int, radius: int):
+    """Full-search block-matching motion estimation.
+
+    Args:
+      cur:  (H, W) float32 luma of the current frame.
+      prev: (H, W) float32 luma of the reference frame.
+      block: macroblock edge (divides H and W).
+      radius: search radius in pixels.
+
+    Returns:
+      mv:  (H//block, W//block, 2) int32 — (dy, dx) displacement of the
+           best-matching block in the reference frame.
+      sad: (H//block, W//block) float32 — SAD of the best match.
+    """
+    H, W = cur.shape
+    hb, wb = H // block, W // block
+    pad = jnp.pad(prev, radius, mode="edge")
+    n_cand = 2 * radius + 1
+
+    def one_candidate(idx):
+        dy, dx = idx // n_cand, idx % n_cand
+        win = jax.lax.dynamic_slice(pad, (dy, dx), (H, W))
+        diff = jnp.abs(cur - win)
+        # per-block sum: (hb, block, wb, block) -> (hb, wb)
+        return diff.reshape(hb, block, wb, block).sum(axis=(1, 3))
+
+    sads = jax.vmap(one_candidate)(jnp.arange(n_cand * n_cand))  # (C, hb, wb)
+    best = jnp.argmin(sads, axis=0)
+    sad = jnp.min(sads, axis=0)
+    mv = jnp.stack([best // n_cand - radius, best % n_cand - radius], axis=-1)
+    return mv.astype(jnp.int32), sad.astype(jnp.float32)
+
+
+# ----------------------------------------------------------------------
+# rope_shift: RoPE position correction of cached keys (paper Eq. 5)
+# ----------------------------------------------------------------------
+def rope_shift_ref(k: jnp.ndarray, delta: jnp.ndarray, theta: float = 10_000.0):
+    """Rotate cached keys by a per-token position delta.
+
+    K_hat(j) = R(p_new(j) - p_old(j)) K(j)   (paper Eq. 5)
+
+    Args:
+      k: (B, S, n_kv, d_h) cached keys (rotate-half RoPE convention).
+      delta: (B, S) int32 position deltas (p_new - p_old).
+      theta: RoPE base.
+
+    Returns:
+      (B, S, n_kv, d_h) corrected keys, same dtype as ``k``.
+    """
+    d_h = k.shape[-1]
+    half = d_h // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = delta.astype(jnp.float32)[..., None] * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    kf = k.astype(jnp.float32)
+    k1, k2 = kf[..., :half], kf[..., half:]
+    out = jnp.concatenate([k1 * cos - k2 * sin, k2 * cos + k1 * sin], axis=-1)
+    return out.astype(k.dtype)
+
+
+def apply_rope_ref(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10_000.0):
+    """Standard RoPE application. x: (B, S, H, D), positions: (B, S)."""
+    return rope_shift_ref(x, positions, theta)
+
+
+# ----------------------------------------------------------------------
+# flash_prefill: causal (optionally windowed) GQA attention
+# ----------------------------------------------------------------------
+def flash_prefill_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    scale: float | None = None,
+):
+    """Reference multi-head attention with GQA broadcast.
+
+    Args:
+      q: (B, Sq, H, D)
+      k, v: (B, Sk, Hkv, D)
+      causal: apply causal mask (query i attends to keys <= i + q_offset).
+      window: sliding-window size (keys within [i+off-window+1, i+off]).
+      q_offset: absolute position of q[0] relative to k[0] (for chunked
+        prefill / decode against a longer cache).
+
+    Returns:
+      (B, Sq, H, D)
+    """
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # (B, Hkv, g, Sq, D) x (B, Hkv, Sk, D) -> (B, Hkv, g, Sq, Sk)
+    qf = qf.reshape(B, Sq, Hkv, g, D).transpose(0, 2, 3, 1, 4)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf.transpose(0, 2, 1, 3))
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf.transpose(0, 2, 1, 3))
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# ssd_scan: Mamba-2 state-space duality, exact sequential recurrence
+# ----------------------------------------------------------------------
+def ssd_scan_ref(
+    x: jnp.ndarray,
+    log_a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    init_state: jnp.ndarray | None = None,
+):
+    """Exact SSD recurrence (the oracle for the chunked kernel).
+
+    h_t = exp(log_a_t) * h_{t-1} + b_t ⊗ x_t            (outer product)
+    y_t = c_t · h_t
+
+    Args:
+      x:     (B, L, H, P)   per-head inputs (dt already folded in).
+      log_a: (B, L, H)      per-step log decay (dt * A, <= 0).
+      b:     (B, L, H, N)   input projections (already per-head).
+      c:     (B, L, H, N)   output projections.
+      init_state: (B, H, P, N) or None.
+
+    Returns:
+      y: (B, L, H, P), final_state: (B, H, P, N)
+    """
+    B, L, H, P = x.shape
+    N = b.shape[-1]
+    xf = x.astype(jnp.float32)
+    af = log_a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(h, t):
+        xt, at, bt, ct = t
+        h = jnp.exp(at)[:, :, None, None] * h + xt[..., None] * bt[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    xs = (
+        xf.transpose(1, 0, 2, 3),
+        af.transpose(1, 0, 2),
+        bf.transpose(1, 0, 2, 3),
+        cf.transpose(1, 0, 2, 3),
+    )
+    h, ys = jax.lax.scan(step, init_state.astype(jnp.float32), xs)
+    y = ys.transpose(1, 0, 2, 3).astype(x.dtype)
+    return y, h
+
+
+def ssd_chunked_ref(
+    x: jnp.ndarray,
+    log_a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    chunk: int,
+    init_state: jnp.ndarray | None = None,
+):
+    """Chunked SSD (the algorithm the Pallas kernel implements), in jnp.
+
+    Mathematically equal to ``ssd_scan_ref`` up to float error; used both
+    as the CPU execution path of the model and as a second oracle that
+    mirrors the kernel's blocking structure.
+    """
+    B, L, H, P = x.shape
+    N = b.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    xf = x.astype(jnp.float32).reshape(B, nc, chunk, H, P)
+    af = log_a.astype(jnp.float32).reshape(B, nc, chunk, H)
+    bf = b.astype(jnp.float32).reshape(B, nc, chunk, H, N)
+    cf = c.astype(jnp.float32).reshape(B, nc, chunk, H, N)
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    cum = jnp.cumsum(af, axis=2)                       # (B, nc, Q, H)
+    # intra-chunk: y_intra[t] = sum_{s<=t} exp(cum_t - cum_s) (c_t.b_s) x_s
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H) t,s
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcthn,bcshn->bctsh", cf, bf)      # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bctsh,bctsh,bcshp->bcthp", cb, decay, xf)
+
+    # chunk summary state: S_c = sum_s exp(cum_end - cum_s) b_s x_s^T
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)       # (B,nc,Q,H)
+    return _ssd_chunked_rest(xf, af, bf, cf, cum, y_intra, decay_end, init_state, x.dtype)
+
+
+def _ssd_chunked_rest(xf, af, bf, cf, cum, y_intra, decay_end, init_state, out_dtype):
+    B, nc, Q, H, P = xf.shape
+    N = bf.shape[-1]
+    states = jnp.einsum("bcsh,bcshn,bcshp->bchpn", decay_end, bf, xf)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])            # (B, nc, H)
+
+    def carry(h, t):
+        st, dec = t
+        y_state = h                                     # state BEFORE this chunk
+        h = dec[:, :, None, None] * h + st
+        return h, y_state
+
+    hs, prev_states = jax.lax.scan(
+        carry,
+        init_state.astype(jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B, nc, H, P, N)
+    # inter-chunk contribution: y_t += exp(cum_t) c_t . S_prev
+    decay_in = jnp.exp(cum)                             # (B, nc, Q, H)
+    y_inter = jnp.einsum(
+        "bcth,bcthn,bchpn->bcthp", decay_in, cf, prev_states
+    )
+    y = (y_intra + y_inter).reshape(B, nc * Q, H, P).astype(out_dtype)
+    return y, hs
+
+
+def ssd_chunked_scan_ref(
+    x: jnp.ndarray,
+    log_a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    chunk: int,
+    init_state: jnp.ndarray | None = None,
+):
+    """Chunked SSD with a lax.scan over chunks (state carried).
+
+    Same math as ``ssd_chunked_ref`` but peak memory is one chunk's
+    (Q x Q) tensors instead of all chunks at once — the difference
+    between 82 GiB and ~2 GiB on a 32k-token hybrid prefill.  This is
+    the structure the Pallas kernel implements and the execution path
+    the model uses.
+    """
+    B, L, H, P = x.shape
+    N = b.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    Q = chunk
+    xf = x.astype(jnp.float32).reshape(B, nc, Q, H, P).transpose(1, 0, 2, 3, 4)
+    af = log_a.astype(jnp.float32).reshape(B, nc, Q, H).transpose(1, 0, 2, 3)
+    bf = b.astype(jnp.float32).reshape(B, nc, Q, H, N).transpose(1, 0, 2, 3, 4)
+    cf = c.astype(jnp.float32).reshape(B, nc, Q, H, N).transpose(1, 0, 2, 3, 4)
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), jnp.float32)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def step(state, t):
+        xc, ac, bc, cc = t                           # (B,Q,H,*)
+        cum = jnp.cumsum(ac, axis=1)                 # (B,Q,H)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bthn,bshn->btsh", cc, bc)
+        y = jnp.einsum("btsh,btsh,bshp->bthp", cb, decay, xc)
+        y += jnp.einsum("bth,bthn,bhpn->bthp", jnp.exp(cum), cc, state)
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)    # (B,Q,H)
+        upd = jnp.einsum("bsh,bshn,bshp->bhpn", decay_end, bc, xc)
+        state = jnp.exp(cum[:, -1, :])[:, :, None, None] * state + upd
+        return state, y
+
+    state, ys = jax.lax.scan(step, init_state.astype(jnp.float32),
+                             (xf, af, bf, cf))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, L, H, P).astype(x.dtype)
+    return y, state
+
+
+def ssd_chunked_scan_grouped_ref(
+    x: jnp.ndarray,
+    log_a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    chunk: int,
+    init_state: jnp.ndarray | None = None,
+):
+    """Chunked SSD keeping B/C in their native per-group layout.
+
+    ``ssd_chunked_scan_ref`` needs per-head B/C, which the caller gets
+    by broadcasting (B, L, G, N) -> (B, L, H, N) — an H/G-fold blow-up
+    of the two widest streaming operands (128x for Jamba/Mamba-2).
+    Here the group dim stays factored through every einsum (§Perf
+    hillclimb, jamba train_4k).
+
+    x: (B, L, H, P); log_a: (B, L, H); b, c: (B, L, G, N), G | H.
+    """
+    B, L, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    Hg = H // G
+    assert L % chunk == 0, (L, chunk)
+    nc, Q = L // chunk, chunk
+    xf = (x.astype(jnp.float32)
+          .reshape(B, nc, Q, G, Hg, P).transpose(1, 0, 2, 3, 4, 5))
+    af = (log_a.astype(jnp.float32)
+          .reshape(B, nc, Q, G, Hg).transpose(1, 0, 2, 3, 4))
+    bf = b.astype(jnp.float32).reshape(B, nc, Q, G, N).transpose(1, 0, 2, 3, 4)
+    cf = c.astype(jnp.float32).reshape(B, nc, Q, G, N).transpose(1, 0, 2, 3, 4)
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), jnp.float32)
+    state0 = init_state.astype(jnp.float32).reshape(B, G, Hg, P, N)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def step(state, t):
+        xc, ac, bc, cc = t                     # (B,Q,G,Hg,*) / (B,Q,G,N)
+        cum = jnp.cumsum(ac, axis=1)           # (B,Q,G,Hg)
+        seg = cum[:, :, None] - cum[:, None]   # (B,Q,Q,G,Hg)
+        decay = jnp.where(tri[None, :, :, None, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("btgn,bsgn->btsg", cc, bc)
+        y = jnp.einsum("btsg,btsgh,bsghp->btghp", cb, decay, xc)
+        y += jnp.einsum("btgh,btgn,bghpn->btghp", jnp.exp(cum), cc, state)
+        decay_end = jnp.exp(cum[:, -1:] - cum)  # (B,Q,G,Hg)
+        upd = jnp.einsum("bsgh,bsgn,bsghp->bghpn", decay_end, bc, xc)
+        state = jnp.exp(cum[:, -1])[..., None, None] * state + upd
+        return state, y
+
+    state, ys = jax.lax.scan(step, state0, (xf, af, bf, cf))
+    y = (ys.transpose(1, 0, 2, 3, 4, 5)
+         .reshape(B, L, H, P).astype(x.dtype))
+    return y, state.reshape(B, H, P, N)
+
+
+def ssd_decode_ref(state, x, log_a, b, c):
+    """Single-step SSD update.
+
+    state: (B, H, P, N); x: (B, H, P); log_a: (B, H); b, c: (B, H, N).
+    Returns y: (B, H, P), new_state.
+    """
+    sf = state.astype(jnp.float32)
+    new = (
+        jnp.exp(log_a.astype(jnp.float32))[:, :, None, None] * sf
+        + x.astype(jnp.float32)[..., None] * b.astype(jnp.float32)[:, :, None, :]
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", new, c.astype(jnp.float32))
+    return y.astype(x.dtype), new

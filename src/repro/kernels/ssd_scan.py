@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan (arXiv:2405.21060).
+
+State-space duality: within a chunk of Q timesteps the recurrence is a
+small (Q x Q) masked matmul (MXU work); across chunks only the (P x N)
+state is carried.  One grid program handles one (batch, head, chunk)
+cell; the chunk axis is innermost/sequential and the state lives in VMEM
+scratch, so HBM traffic is exactly one read of x/a/b/c and one write of y
+— the TPU-native replacement for the paper-adjacent GPU scan kernels.
+
+Grid: (B, H, L/Q).  B/C tensors are stored per-group (n_groups <= H) and
+the group index is resolved in the BlockSpec index map, mirroring GQA.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref, a_ref, b_ref, c_ref, init_ref, y_ref, st_ref, state,
+    *, q: int, n_chunks: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state[...] = init_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, 0].astype(jnp.float32)      # (Q, P)
+    la = a_ref[0, 0].astype(jnp.float32)     # (Q,)
+    b = b_ref[0, 0].astype(jnp.float32)      # (Q, N)
+    c = c_ref[0, 0].astype(jnp.float32)      # (Q, N)
+
+    cum = jnp.cumsum(la)                     # (Q,)
+    # intra-chunk: y[t] = sum_{s<=t} exp(cum_t - cum_s) (c_t . b_s) x_s
+    seg = cum[:, None] - cum[None, :]        # (Q, Q) t, s
+    tri = jax.lax.iota(jnp.int32, q)[:, None] >= jax.lax.iota(jnp.int32, q)[None, :]
+    decay = jnp.where(tri, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                         # (Q, Q)
+    y = jax.lax.dot_general(
+        cb * decay, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                         # (Q, P)
+
+    # inter-chunk: y[t] += exp(cum_t) c_t . S_prev
+    s_prev = state[...]                       # (P, N)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        c, s_prev, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # state update: S = exp(cum_end) S_prev + sum_s exp(cum_end - cum_s) x_s b_s^T
+    w = jnp.exp(cum[-1] - cum)[:, None]       # (Q, 1)
+    upd = jax.lax.dot_general(
+        x, b * w, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                         # (P, N)
+    state[...] = jnp.exp(cum[-1]) * s_prev + upd
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == n_chunks - 1)
+    def _final():
+        st_ref[0, 0] = state[...].astype(st_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "n_groups", "interpret"))
+def ssd_scan_pallas(
+    x: jnp.ndarray,
+    log_a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    init_state: jnp.ndarray | None = None,
+    chunk: int = 128,
+    n_groups: int = 1,
+    interpret: bool = False,
+):
+    """Chunked SSD.  See ``ref.ssd_scan_ref``.
+
+    Args:
+      x: (B, L, H, P); log_a: (B, L, H); b, c: (B, L, G, N) per-group.
+    Returns: y (B, L, H, P), final state (B, H, P, N).
+    """
+    B, L, H, P = x.shape
+    N = b.shape[-1]
+    G = b.shape[2]
+    assert G == n_groups
+    gsz = H // G
+    q = min(chunk, L)
+    assert L % q == 0, (L, q)
+    nc = L // q
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    xt = x.transpose(0, 2, 1, 3)              # (B, H, L, P)
+    at = log_a.transpose(0, 2, 1)             # (B, H, L)
+    bt = b.transpose(0, 2, 1, 3)              # (B, G, L, N)
+    ct = c.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_ssd_kernel, q=q, n_chunks=nc)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, P), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1, q), lambda ib, ih, ic: (ib, ih, ic)),
+            pl.BlockSpec((1, 1, q, N), lambda ib, ih, ic: (ib, ih // gsz, ic, 0)),
+            pl.BlockSpec((1, 1, q, N), lambda ib, ih, ic: (ib, ih // gsz, ic, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, P), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, L, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xt, at, bt, ct, init_state)
+    return y.transpose(0, 2, 1, 3), st

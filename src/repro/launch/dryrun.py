@@ -1,0 +1,160 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and extract the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json and the
+aggregate table in experiments/roofline.json.
+
+NOTE: the XLA_FLAGS line above MUST run before any other import (jax
+locks the device count on first initialization); do not set it globally
+— smoke tests and benches must see 1 device.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from ..analysis import roofline as rl
+from ..configs import INPUT_SHAPES, get_config
+from ..configs.registry import ASSIGNED, SKIPS
+from .mesh import make_production_mesh
+from .specs import build_program
+
+
+def run_one(arch: str, shape_name: str, mesh_name: str, outdir: str,
+            *, parts: bool = True, q_chunk: int = 512,
+            overrides: dict | None = None, tag: str = "") -> rl.Report:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.devices.size
+    rep = rl.Report(arch=arch, shape=shape_name, mesh=mesh_name,
+                    chips=chips, ok=False)
+    if (arch, shape_name) in SKIPS:
+        rep.error = "SKIP: " + SKIPS[(arch, shape_name)]
+        return rep
+    try:
+        from ..sharding.ctx import activation_mesh, set_seq_sharding
+        overrides = overrides or {}
+        prog = build_program(cfg, shape, mesh, q_chunk=q_chunk,
+                             overrides=overrides)
+        rep.model_flops = prog.model_flops
+        t0 = time.time()
+        set_seq_sharding(bool(overrides.get("seq_shard_acts")))
+        with mesh, activation_mesh(mesh):
+            kw = {}
+            if prog.out_shardings is not None:
+                kw["out_shardings"] = prog.out_shardings
+            lowered = jax.jit(
+                prog.fn, in_shardings=prog.in_shardings,
+                donate_argnums=prog.donate, **kw,
+            ).lower(*prog.args)
+            compiled = lowered.compile()
+        rep.compile_seconds = time.time() - t0
+        ma = compiled.memory_analysis()
+        temp = float(getattr(ma, "temp_size_in_bytes", 0))
+        arg = float(getattr(ma, "argument_size_in_bytes", 0))
+        out = float(getattr(ma, "output_size_in_bytes", 0))
+        alias = float(getattr(ma, "alias_size_in_bytes", 0))
+        # XLA:CPU ignores buffer donation; on TPU the donated inputs alias
+        # their outputs.  Subtract the donated bytes the TPU would alias.
+        donated = 0.0
+        if alias == 0.0:
+            for i in prog.donate:
+                for leaf in jax.tree_util.tree_leaves(prog.args[i]):
+                    donated += float(
+                        leaf.size * leaf.dtype.itemsize
+                    ) / chips
+            donated = min(donated, out)
+        rep.peak_bytes_per_device = temp + arg + out - alias - donated
+        rep.arg_bytes_per_device = arg
+        d = rl.analyze_lowered(lowered, compiled)
+        rep.full_collectives = {
+            k: v["operand_bytes"] for k, v in d["coll_detail"].items()
+        }
+        part_costs = []
+        if parts:
+            for (name, mult, fn, args, shardings) in prog.parts:
+                part_costs.append(
+                    rl.lower_part(fn, args, shardings, mesh, name, mult)
+                )
+            rl.assemble(rep, part_costs)
+        else:
+            rep.flops_per_device = d["flops"]
+            rep.bytes_per_device = d["bytes_accessed"]
+            rep.coll_bytes_per_device = d["coll_operand_bytes"]
+        rep.ok = True
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        rep.error = f"{type(e).__name__}: {e}"
+        rep.parts = []
+        traceback.print_exc()
+    finally:
+        from ..sharding.ctx import set_seq_sharding as _sss
+        _sss(False)
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        path = os.path.join(outdir, f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump({**rep.summary(), "parts": rep.parts,
+                       "full_collectives": rep.full_collectives}, f, indent=1)
+    return rep
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    ap.add_argument("--no-parts", action="store_true",
+                    help="skip per-layer roofline assembly (faster)")
+    ap.add_argument("--override", nargs="*", default=[],
+                    help="hillclimb knobs, e.g. no_fsdp=1 q_chunk=2048")
+    ap.add_argument("--tag", default="", help="output filename suffix")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        overrides[k] = float(v) if "." in v else int(v)
+
+    archs = ASSIGNED if args.all or args.arch is None else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.all or args.shape is None else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    rows = []
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape in shapes:
+                t0 = time.time()
+                rep = run_one(arch, shape, mesh_name, args.outdir,
+                              parts=not args.no_parts,
+                              overrides=overrides, tag=args.tag)
+                status = "OK " if rep.ok else ("SKIP" if rep.error.startswith("SKIP") else "FAIL")
+                print(
+                    f"[{status}] {arch:22s} {shape:12s} {mesh_name:6s} "
+                    f"compile={rep.compile_seconds:6.1f}s "
+                    f"peak={rep.peak_bytes_per_device/2**30:7.2f}GiB "
+                    f"dom={rep.dominant if rep.ok else '-':10s} "
+                    f"wall={time.time()-t0:6.1f}s {rep.error[:80]}",
+                    flush=True,
+                )
+                rows.append(rep.summary())
+    if args.all and not args.tag:
+        # only a full untagged sweep owns the aggregate table
+        with open(os.path.join(args.outdir, "..", "roofline.json"), "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

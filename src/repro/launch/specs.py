@@ -1,0 +1,428 @@
+"""Dry-run program construction: step fn + abstract inputs + shardings
+for every (architecture x input-shape x mesh) combination, plus the
+per-component lowers the roofline assembly needs (see
+``repro.analysis.roofline`` for why components are lowered separately).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import INPUT_SHAPES, ModelCfg, ShapeCfg
+from ..configs.registry import LONG_CONTEXT_WINDOW, SKIPS
+from ..models import transformer as tfm
+from ..models import layers
+from ..sharding import rules as shr
+from ..training.optimizer import OptCfg
+from ..training.train_step import Batch, make_train_step
+
+F32 = jnp.float32
+SDS = jax.ShapeDtypeStruct
+
+
+def shape_adapted_cfg(cfg: ModelCfg, shape: ShapeCfg) -> ModelCfg:
+    """long_500k on attention archs runs the sliding-window variant."""
+    if (
+        shape.name == "long_500k"
+        and cfg.sliding_window is None
+        and "attn" in cfg.block_pattern
+        and cfg.family in ("dense", "moe", "vlm")
+    ):
+        return dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def opt_cfg_for(cfg: ModelCfg) -> OptCfg:
+    """bf16 optimizer moments for the >=100B-class models (HBM budget)."""
+    big = cfg.param_count() >= 60e9
+    return OptCfg(state_dtype="bfloat16" if big else "float32")
+
+
+def abstract_state(cfg: ModelCfg):
+    """(abstract params, logical specs, abstract opt state)."""
+    params, specs = tfm.init_params(cfg, jax.random.PRNGKey(0), abstract=True)
+    ocfg = opt_cfg_for(cfg)
+    dt = jnp.bfloat16 if ocfg.state_dtype == "bfloat16" else F32
+    moment = jax.tree_util.tree_map(lambda p: SDS(p.shape, dt), params)
+    from ..training.optimizer import OptState
+    opt = OptState(SDS((), jnp.int32), moment, moment)
+    return params, specs, opt, ocfg
+
+
+def _sds_tree(tree):
+    return jax.tree_util.tree_map(lambda x: SDS(x.shape, x.dtype), tree)
+
+
+def abstract_caches(cfg: ModelCfg, batch: int, max_len: int):
+    return jax.eval_shape(lambda: tfm.init_caches(cfg, batch, max_len))
+
+
+def cache_shardings(cfg: ModelCfg, caches, mesh: Mesh, batch: int, *, seq_shard: bool):
+    kv = shr.kv_cache_spec(mesh, batch, seq_shard=seq_shard,
+                           n_kv=cfg.n_kv, d_head=cfg.d_head)
+    if cfg.ssm is not None:
+        di = cfg.ssm.d_inner(cfg.d_model)
+        conv, ssm = shr.ssm_cache_specs(
+            mesh, batch, n_heads=cfg.ssm.n_heads(cfg.d_model),
+            conv_dim=di + 2 * cfg.ssm.n_groups * cfg.ssm.d_state,
+        )
+    else:
+        conv, ssm = shr.ssm_cache_specs(mesh, batch)
+
+    def per_block(blk):
+        if isinstance(blk, layers.KVCache):
+            return layers.KVCache(NamedSharding(mesh, kv), NamedSharding(mesh, kv))
+        return layers.SSMCache(NamedSharding(mesh, conv), NamedSharding(mesh, ssm))
+
+    cross = None
+    if caches.cross is not None:
+        cs = NamedSharding(mesh, shr.kv_cache_spec(
+            mesh, batch, seq_shard=False, n_kv=cfg.n_kv, d_head=cfg.d_head))
+        cross = (cs, cs)
+    return tfm.Caches(tuple(per_block(b) for b in caches.blocks), cross)
+
+
+# ======================================================================
+# Step-function + spec construction per shape kind
+# ======================================================================
+@dataclasses.dataclass
+class DryRunProgram:
+    name: str
+    fn: Callable
+    args: tuple                 # abstract arguments
+    in_shardings: Any
+    donate: tuple
+    parts: list                 # [(name, multiplier, fn, args, shardings)]
+    model_flops: float
+    out_shardings: Any = None   # match cache out to in so donation aliases
+
+
+def _train_batch_specs(cfg: ModelCfg, shape: ShapeCfg, mesh: Mesh):
+    B, S = shape.global_batch, shape.seq_len
+    dp = shr.data_spec(mesh, B, 2)
+    tok = SDS((B, S), jnp.int32)
+    batch = dict(
+        tokens=tok, targets=tok,
+        loss_mask=SDS((B, S), F32),
+    )
+    shard = dict(
+        tokens=NamedSharding(mesh, dp), targets=NamedSharding(mesh, dp),
+        loss_mask=NamedSharding(mesh, dp),
+    )
+    dp3 = shr.data_spec(mesh, B, 3)
+    if cfg.family == "vlm":
+        batch["inputs_embeds"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+        batch["embed_mask"] = SDS((B, S), jnp.bool_)
+        shard["inputs_embeds"] = NamedSharding(mesh, dp3)
+        shard["embed_mask"] = NamedSharding(mesh, dp)
+    if cfg.enc_dec:
+        batch["enc_feats"] = SDS((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        shard["enc_feats"] = NamedSharding(mesh, dp3)
+    b = Batch(**batch)
+    s = Batch(**{**{k: None for k in Batch._fields}, **shard})
+    return b, s
+
+
+def _model_flops(cfg: ModelCfg, shape: ShapeCfg) -> float:
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: one token
+
+
+def build_program(
+    cfg: ModelCfg, shape: ShapeCfg, mesh: Mesh, *, q_chunk: int = 512,
+    overrides: dict | None = None,
+) -> DryRunProgram:
+    """``overrides`` — §Perf hillclimb knobs:
+      no_fsdp: bool   — TP-only params (replicate over data); kills the
+                        per-layer FSDP all-gathers for inference shapes.
+      seq_shard_acts: bool — TP-SP residual boundaries (see ctx).
+      micro_budget: float — remat-save byte budget for microbatching.
+      q_chunk: int    — attention query chunk.
+      ce_chunk: int   — loss chunk.
+    """
+    ov = overrides or {}
+    q_chunk = int(ov.get("q_chunk", q_chunk))
+    cfg = shape_adapted_cfg(cfg, shape)
+    if ov.get("moe_cf") and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(
+                cfg.moe, capacity_factor=float(ov["moe_cf"])))
+    if ov.get("ssd_chunk") and cfg.ssm is not None:
+        cfg = dataclasses.replace(
+            cfg, ssm=dataclasses.replace(cfg.ssm, chunk=int(ov["ssd_chunk"])))
+    params, specs, opt, ocfg = abstract_state(cfg)
+    rules = shr.default_rules(mesh)
+    if ov.get("no_fsdp"):
+        rules = dict(rules, embed=None)
+    pshard = shr.param_shardings(specs, mesh, rules=rules, params_tree=params)
+    B, S = shape.global_batch, shape.seq_len
+    chips = mesh.devices.size
+
+    # ---- per-layer parts shared by all kinds --------------------------
+    def layer_params_at(pos):
+        lp = jax.tree_util.tree_map(lambda x: SDS(x.shape[1:], x.dtype),
+                                    params["blocks"][pos])
+        specs1 = jax.tree_util.tree_map(
+            lambda s: s[1:], specs["blocks"][pos],
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(a is None or isinstance(a, str) for a in x),
+        )
+        lsh = shr.param_shardings(specs1, mesh, rules=rules, params_tree=lp)
+        return lp, lsh
+
+    dp3 = NamedSharding(mesh, shr.data_spec(mesh, B, 3))
+    dp2 = NamedSharding(mesh, shr.data_spec(mesh, B, 2))
+
+    def part_len(pos):
+        """Per-layer cost lowers must be scan-free so XLA's cost
+        analysis counts every FLOP (while bodies count once):
+        attention positions lower at full S with q_chunk=S; mamba
+        positions lower at one SSD chunk and multiply.
+
+        chunk_parts=1 (hillclimb): attention positions lower as ONE
+        query chunk against the full cache x (S/q_chunk) instead — this
+        exposes the per-chunk KV re-read traffic that the full-S lower
+        idealizes away (flash-style single-pass)."""
+        if cfg.block_pattern[pos] == "mamba" and S > cfg.ssm.chunk:
+            lp_len = cfg.ssm.chunk
+            return lp_len, cfg.repeats * (S // lp_len)
+        if ov.get("chunk_parts") and S > q_chunk and S % q_chunk == 0:
+            return q_chunk, cfg.repeats * (S // q_chunk)
+        return S, cfg.repeats
+
+    parts = []
+    if shape.kind == "train":
+        opt_shard = jax.tree_util.tree_map(
+            lambda _: None, opt,
+        )
+        from ..training.optimizer import OptState
+        opt_shard = OptState(
+            NamedSharding(mesh, P()),
+            jax.tree_util.tree_map(lambda s: s, pshard),
+            jax.tree_util.tree_map(lambda s: s, pshard),
+        )
+        batch, bshard = _train_batch_specs(cfg, shape, mesh)
+        # Microbatch so the rematerialization boundary saves
+        # (n_layers x micro_tokens x d_model x 2B / data_shards) stay
+        # within a ~5 GiB budget per device.
+        dshard = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                dshard *= mesh.shape[a]
+        tok_budget = float(ov.get("micro_budget", 5e9)) * dshard / (
+            cfg.n_layers * cfg.d_model * 2)
+        micro = max(1, int(-(-B * S // max(tok_budget, 1))))
+        micro = min(micro, B)
+        while B % micro:
+            micro += 1
+        acc_dtype = jnp.bfloat16 if ov.get("acc_bf16") else F32
+        step = make_train_step(cfg, ocfg, q_chunk=q_chunk, remat=True,
+                               microbatch=micro, acc_dtype=acc_dtype)
+        fn, args = step, (params, opt, batch)
+        in_sh = (pshard, opt_shard, bshard)
+        donate = (0, 1)
+
+        # components: embed+head fwd/bwd, per-pos layer fwd/bwd, optimizer
+        h_sds = SDS((B, S, cfg.d_model), jnp.bfloat16)
+
+        def embed_head(p_embed, p_norm, p_head, tokens, targets, mask):
+            def f(pe, pn, ph):
+                h = pe[tokens]
+                hn = layers.rmsnorm(pn, h, cfg.norm_eps)
+                from ..training.train_step import chunked_cross_entropy
+                # chunk = S: scan-free so the cost analysis is exact
+                return chunked_cross_entropy(hn, ph, targets, mask, chunk=S)
+            return jax.grad(f, argnums=(0, 2))(p_embed, p_norm, p_head)
+
+        head_w = params["embed"] if cfg.tied_embeddings else params["lm_head"]
+        head_sh = pshard["embed"] if cfg.tied_embeddings else pshard["lm_head"]
+        if cfg.tied_embeddings:
+            head_w = SDS((cfg.d_model, cfg.vocab), head_w.dtype)
+        parts.append((
+            "embed_head", 1, embed_head,
+            (params["embed"], params["final_norm"], head_w,
+             batch.tokens, batch.targets, batch.loss_mask),
+            (pshard["embed"], pshard["final_norm"], head_sh,
+             bshard.tokens, bshard.targets, bshard.loss_mask),
+        ))
+
+        for pos in range(cfg.period):
+            lp, lsh = layer_params_at(pos)
+            Lp, mult = part_len(pos)
+            h_p = SDS((B, Lp, cfg.d_model), jnp.bfloat16)
+
+            def layer_fb(lp, h, _pos=pos, _L=Lp):
+                def f(lp, h):
+                    pos_ids = jnp.broadcast_to(jnp.arange(_L)[None], (B, _L))
+                    out, _, aux = tfm._apply_block(
+                        cfg, _pos, lp, h, pos_ids, None, None, None, None,
+                        None, decode=False, q_chunk=_L,
+                    )
+                    return jnp.sum(out.astype(F32)) + aux
+                g = jax.grad(f, argnums=(0, 1))(lp, h)
+                return g
+
+            parts.append((
+                f"layer{pos}", mult, layer_fb, (lp, h_p), (lsh, dp3),
+            ))
+
+        def opt_only(p, o):
+            from ..training.optimizer import apply_updates
+            g = jax.tree_util.tree_map(jnp.zeros_like, p)
+            return apply_updates(p, g, o, ocfg)[0]
+
+        parts.append(("optimizer", 1, opt_only, (params, opt), (pshard, opt_shard)))
+
+    elif shape.kind == "prefill":
+        caches = abstract_caches(cfg, B, S)
+        csh = cache_shardings(cfg, caches, mesh, B, seq_shard=False)
+        if cfg.enc_dec:
+            cross = jax.eval_shape(
+                lambda: (
+                    jnp.zeros((cfg.repeats, B, cfg.enc_seq, cfg.n_kv, cfg.d_head), jnp.bfloat16),
+                    jnp.zeros((cfg.repeats, B, cfg.enc_seq, cfg.n_kv, cfg.d_head), jnp.bfloat16),
+                )
+            )
+            caches = tfm.Caches(caches.blocks, cross)
+            csh = cache_shardings(cfg, caches, mesh, B, seq_shard=False)
+
+        if cfg.family == "vlm":
+            def fn(p, embeds, caches):
+                toks = jnp.zeros((B, S), jnp.int32)
+                return tfm.prefill(cfg, p, toks, caches,
+                                   inputs_embeds=embeds, q_chunk=q_chunk)[:2]
+            args = (params, SDS((B, S, cfg.d_model), jnp.bfloat16), caches)
+            in_sh = (pshard, dp3, csh)
+        elif cfg.enc_dec:
+            def fn(p, tokens, enc_feats, caches):
+                enc = tfm.run_encoder(cfg, p, enc_feats, q_chunk)
+                cross = tfm.build_cross_kv(cfg, p, enc)
+                caches2 = tfm.Caches(caches.blocks, cross)
+                return tfm.prefill(cfg, p, tokens, caches2, q_chunk=q_chunk)[:2]
+            args = (params, SDS((B, S), jnp.int32),
+                    SDS((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16),
+                    tfm.Caches(caches.blocks, None))
+            in_sh = (pshard, dp2, dp3,
+                     tfm.Caches(csh.blocks, None))
+        else:
+            def fn(p, tokens, caches):
+                return tfm.prefill(cfg, p, tokens, caches, q_chunk=q_chunk)[:2]
+            args = (params, SDS((B, S), jnp.int32), caches)
+            in_sh = (pshard, dp2, csh)
+        donate = (len(args) - 1,)
+
+        # components: embed, per-pos prefill layer, head(last token)
+        h_sds = SDS((B, S, cfg.d_model), jnp.bfloat16)
+        parts.append((
+            "embed", 1,
+            lambda pe, toks: pe[toks],
+            (params["embed"], SDS((B, S), jnp.int32)),
+            (pshard["embed"], dp2),
+        ))
+        for pos in range(cfg.period):
+            lp, lsh = layer_params_at(pos)
+            Lp, mult = part_len(pos)
+            h_p = SDS((B, Lp, cfg.d_model), jnp.bfloat16)
+            blk = caches.blocks[pos]
+            if cfg.block_pattern[pos] == "attn":
+                blk1 = jax.tree_util.tree_map(
+                    lambda x: SDS(x.shape[1:], x.dtype), blk)
+            else:
+                blk1 = jax.tree_util.tree_map(
+                    lambda x: SDS(x.shape[1:], x.dtype), blk)
+            bsh1 = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, P(*s.spec[1:])),
+                cache_shardings(cfg, caches, mesh, B, seq_shard=False).blocks[pos],
+            )
+
+            def layer_pf(lp, h, c, _pos=pos, _L=Lp):
+                pos_ids = jnp.broadcast_to(jnp.arange(_L)[None], (B, _L))
+                out, nc, _ = tfm._apply_block(
+                    cfg, _pos, lp, h, pos_ids, None, c,
+                    jnp.zeros((), jnp.int32), None, None,
+                    decode=False, q_chunk=_L,
+                )
+                return out, nc
+
+            parts.append((f"layer{pos}", mult, layer_pf,
+                          (lp, h_p, blk1), (lsh, dp3, bsh1)))
+        head_w = params["embed"] if cfg.tied_embeddings else params["lm_head"]
+        head_sh = pshard["embed"] if cfg.tied_embeddings else pshard["lm_head"]
+        if cfg.tied_embeddings:
+            head_w = SDS((cfg.d_model, cfg.vocab), head_w.dtype)
+        parts.append((
+            "head", 1,
+            lambda ph, h: (h[:, -1] @ ph).astype(F32),
+            (head_w, h_sds), (head_sh, dp3),
+        ))
+
+    else:  # decode
+        seq_shard = B == 1
+        caches = abstract_caches(cfg, B, S)
+        csh = cache_shardings(cfg, caches, mesh, B, seq_shard=seq_shard)
+        if cfg.enc_dec:
+            cross = jax.eval_shape(
+                lambda: (
+                    jnp.zeros((cfg.repeats, B, cfg.enc_seq, cfg.n_kv, cfg.d_head), jnp.bfloat16),
+                    jnp.zeros((cfg.repeats, B, cfg.enc_seq, cfg.n_kv, cfg.d_head), jnp.bfloat16),
+                )
+            )
+            caches = tfm.Caches(caches.blocks, cross)
+            csh = cache_shardings(cfg, caches, mesh, B, seq_shard=seq_shard)
+
+        def fn(p, tok, caches):
+            return tfm.decode_step(cfg, p, tok, caches, S - 1)
+
+        args = (params, SDS((B, 1), jnp.int32), caches)
+        in_sh = (pshard, dp2, csh)
+        donate = (2,)
+        out_sh = (NamedSharding(mesh, shr.data_spec(mesh, B, 2)), csh)
+
+        h1 = SDS((B, 1, cfg.d_model), jnp.bfloat16)
+        parts.append((
+            "embed", 1, lambda pe, t: pe[t],
+            (params["embed"], SDS((B, 1), jnp.int32)), (pshard["embed"], dp2),
+        ))
+        for pos in range(cfg.period):
+            lp, lsh = layer_params_at(pos)
+            blk = caches.blocks[pos]
+            blk1 = jax.tree_util.tree_map(lambda x: SDS(x.shape[1:], x.dtype), blk)
+            bsh1 = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, P(*s.spec[1:])), csh.blocks[pos]
+            )
+
+            def layer_dc(lp, h, c, _pos=pos):
+                pos_ids = jnp.full((B, 1), S - 1, jnp.int32)
+                out, nc, _ = tfm._apply_block(
+                    cfg, _pos, lp, h, pos_ids, None, c,
+                    jnp.asarray(S - 1, jnp.int32), S, None,
+                    decode=True, q_chunk=q_chunk,
+                )
+                return out, nc
+
+            parts.append((f"layer{pos}", cfg.repeats, layer_dc,
+                          (lp, h1, blk1), (lsh, dp3, bsh1)))
+        head_w = params["embed"] if cfg.tied_embeddings else params["lm_head"]
+        head_sh = pshard["embed"] if cfg.tied_embeddings else pshard["lm_head"]
+        if cfg.tied_embeddings:
+            head_w = SDS((cfg.d_model, cfg.vocab), head_w.dtype)
+        parts.append((
+            "head", 1, lambda ph, h: (h[:, -1] @ ph).astype(F32),
+            (head_w, h1), (head_sh, dp3),
+        ))
+
+    return DryRunProgram(
+        name=f"{cfg.name}:{shape.name}",
+        fn=fn, args=args, in_shardings=in_sh, donate=donate,
+        parts=parts, model_flops=_model_flops(cfg, shape),
+        out_shardings=locals().get("out_sh"),
+    )

@@ -1,0 +1,90 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b-smoke \
+        --steps 100 --batch 8 --seq 128
+
+Real-hardware runs use the production mesh (``--mesh single|multi``);
+on this CPU container the default host mesh (1 device) trains the smoke
+variants — the end-to-end driver in examples/train_anomaly_vlm.py goes
+through this module.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..data.pipeline import lm_batches
+from ..models import transformer as tfm
+from ..sharding import rules as shr
+from ..sharding.ctx import activation_mesh
+from ..training import checkpoint
+from ..training.optimizer import OptCfg, init_opt_state
+from ..training.train_step import make_train_step
+from .mesh import make_host_mesh, make_production_mesh
+
+
+def train(
+    arch: str, steps: int, batch: int, seq: int, *,
+    lr: float = 3e-4, mesh_kind: str = "host", seed: int = 0,
+    log_every: int = 10, ckpt_path: str | None = None,
+    microbatch: int = 1, q_chunk: int = 1024,
+):
+    cfg = get_config(arch)
+    mesh = {
+        "host": make_host_mesh,
+        "single": make_production_mesh,
+        "multi": lambda: make_production_mesh(multi_pod=True),
+    }[mesh_kind]()
+    ocfg = OptCfg(lr=lr, warmup=min(100, steps // 10 + 1), total_steps=steps)
+
+    params, specs = tfm.init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = init_opt_state(params, ocfg)
+    pshard = shr.param_shardings(specs, mesh, params_tree=params)
+    params = jax.device_put(params, pshard)
+
+    step_fn = make_train_step(cfg, ocfg, q_chunk=q_chunk, microbatch=microbatch)
+    with mesh, activation_mesh(mesh if mesh.devices.size > 1 else None):
+        jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+        it = lm_batches(cfg, batch, seq, seed=seed,
+                        vlm_tokens=seq // 4 if cfg.family == "vlm" else 0)
+        losses = []
+        t0 = time.time()
+        for i in range(steps):
+            b = next(it)
+            params, opt_state, m = jit_step(params, opt_state, b)
+            losses.append(float(m["loss"]))
+            if i % log_every == 0 or i == steps - 1:
+                print(f"step {i:5d} loss {losses[-1]:.4f} "
+                      f"lr {float(m['lr']):.2e} gnorm {float(m['grad_norm']):.3f} "
+                      f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+    if ckpt_path:
+        checkpoint.save(ckpt_path, params, opt_state, steps)
+        print(f"saved {ckpt_path}")
+    return params, losses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mesh", default="host", choices=["host", "single", "multi"])
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+    _, losses = train(
+        args.arch, args.steps, args.batch, args.seq, lr=args.lr,
+        mesh_kind=args.mesh, ckpt_path=args.ckpt, microbatch=args.microbatch,
+    )
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""ViT encoder + pixel-unshuffle projector, with patch-pruned execution.
+
+This is the CodecFlow pruning target (paper §3.3.2): the encoder can run
+on a *selected subset* of patches (static capacity K_sel — the TPU
+adaptation of dynamic pruning, DESIGN.md §3), scatter the encoded
+patches back to the full grid, and apply the native 2x2 pixel-unshuffle
+projection so the downstream LLM token layout is unchanged.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelCfg, ViTCfg
+from . import layers
+from .init import ParamBuilder, split_tree, stack_layers
+
+F32 = jnp.float32
+
+
+def init_vit(pb: ParamBuilder, v: ViTCfg, d_lm: int):
+    def block():
+        return {
+            "ln1": layers.init_rmsnorm(pb, v.d_model),
+            "wq": pb.dense((v.d_model, v.d_model), ("embed", "heads")),
+            "wk": pb.dense((v.d_model, v.d_model), ("embed", "heads")),
+            "wv": pb.dense((v.d_model, v.d_model), ("embed", "heads")),
+            "wo": pb.dense((v.d_model, v.d_model), ("heads", "embed")),
+            "ln2": layers.init_rmsnorm(pb, v.d_model),
+            "ffn": layers.init_mlp(pb, v.d_model, v.d_ff),
+        }
+    return {
+        "patch_embed": pb.dense((v.patch * v.patch, v.d_model), (None, "embed")),
+        "pos_embed": pb.dense((v.n_patches, v.d_model), (None, "embed"), scale=0.02),
+        "blocks": stack_layers([block() for _ in range(v.n_layers)]),
+        "final_norm": layers.init_rmsnorm(pb, v.d_model),
+        "projector": pb.dense((v.group * v.group * v.d_model, d_lm), (None, "embed")),
+    }
+
+
+def patchify(frames: jnp.ndarray, v: ViTCfg) -> jnp.ndarray:
+    """frames (B, H, W) luma [0,255] -> (B, P, patch*patch) in [-1, 1]."""
+    B, H, W = frames.shape
+    pp = v.patches_per_side
+    x = frames.reshape(B, pp, v.patch, pp, v.patch).transpose(0, 1, 3, 2, 4)
+    return (x.reshape(B, pp * pp, v.patch * v.patch) / 127.5) - 1.0
+
+
+def _encoder(params, v: ViTCfg, h: jnp.ndarray, valid: Optional[jnp.ndarray], eps: float):
+    """h: (B, T, d); valid: (B, T) bool or None (masked attention)."""
+    B, T, _ = h.shape
+    pos = jnp.zeros((B, T), jnp.int32)  # no RoPE in ViT; positions unused
+
+    def body(h, lp):
+        hn = layers.rmsnorm(lp["ln1"], h, eps)
+        dh = v.d_model // v.n_heads
+        q = (hn @ lp["wq"]).reshape(B, T, v.n_heads, dh)
+        k = (hn @ lp["wk"]).reshape(B, T, v.n_heads, dh)
+        vv = (hn @ lp["wv"]).reshape(B, T, v.n_heads, dh)
+        out = layers.mha(q, k, vv, pos, pos, valid, causal=False)
+        h = h + out.reshape(B, T, v.d_model) @ lp["wo"]
+        hn = layers.rmsnorm(lp["ln2"], h, eps)
+        return h + layers.mlp_block(lp["ffn"], hn), None
+
+    h, _ = jax.lax.scan(body, h, params["blocks"])
+    return layers.rmsnorm(params["final_norm"], h, eps)
+
+
+def encode_full(params, v: ViTCfg, frames: jnp.ndarray, eps: float = 1e-5):
+    """Unpruned path: (B, H, W) -> (B, n_groups, d_lm) visual tokens."""
+    x = patchify(frames, v).astype(params["patch_embed"].dtype)
+    h = x @ params["patch_embed"] + params["pos_embed"][None]
+    h = _encoder(params, v, h, None, eps)
+    return project(params, v, h)
+
+
+def encode_pruned(
+    params, v: ViTCfg, frames: jnp.ndarray,
+    sel_idx: jnp.ndarray, sel_valid: jnp.ndarray, eps: float = 1e-5,
+) -> jnp.ndarray:
+    """Pruned path (paper §3.3.2, static capacity).
+
+    Args:
+      frames: (B, H, W).
+      sel_idx: (B, K_sel) int32 — patch indices to encode (group-complete;
+        padded entries repeat index 0).
+      sel_valid: (B, K_sel) bool — padding mask.
+
+    Returns:
+      (B, n_patches, d_vit) full-grid encoded patches, zeros at pruned
+      positions (the projector then consumes the native layout).
+    """
+    B = frames.shape[0]
+    x = patchify(frames, v).astype(params["patch_embed"].dtype)
+    emb = x @ params["patch_embed"] + params["pos_embed"][None]   # (B, P, d)
+    sel = jnp.take_along_axis(emb, sel_idx[..., None], axis=1)    # (B, K, d)
+    h = _encoder(params, v, sel, sel_valid, eps)
+    h = jnp.where(sel_valid[..., None], h, 0)
+    full = jnp.zeros((B, v.n_patches, v.d_model), h.dtype)
+    # scatter back; padded lanes all hit index 0 with zero contribution
+    full = full.at[jnp.arange(B)[:, None], sel_idx].add(h)
+    return full
+
+
+def project(params, v: ViTCfg, patch_feats: jnp.ndarray) -> jnp.ndarray:
+    """2x2 pixel-unshuffle + linear projection to LM width.
+
+    patch_feats: (B, n_patches, d_vit) in row-major patch order.
+    Returns (B, n_groups, d_lm).
+    """
+    B = patch_feats.shape[0]
+    pp, g = v.patches_per_side, v.group
+    gs = v.groups_per_side
+    x = patch_feats.reshape(B, gs, g, gs, g, v.d_model)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(B, gs * gs, g * g * v.d_model)
+    return x @ params["projector"]
+
+
+def encode_pruned_tokens(
+    params, v: ViTCfg, frames: jnp.ndarray,
+    sel_idx: jnp.ndarray, sel_valid: jnp.ndarray, eps: float = 1e-5,
+) -> jnp.ndarray:
+    """Pruned ViT -> projected visual tokens (B, n_groups, d_lm)."""
+    full = encode_pruned(params, v, frames, sel_idx, sel_valid, eps)
+    return project(params, v, full)

@@ -1,0 +1,8 @@
+from .engine import Engine, EngineCfg, WindowStats, QUERY_IDS, YES, NO
+from .metrics import precision_recall_f1, video_prediction, agreement
+from . import flops
+
+__all__ = [
+    "Engine", "EngineCfg", "WindowStats", "QUERY_IDS", "YES", "NO",
+    "precision_recall_f1", "video_prediction", "agreement", "flops",
+]

@@ -1,0 +1,4 @@
+from .rules import (
+    default_rules, logical_to_pspec, param_shardings, param_pspecs,
+    batch_axes, data_spec, kv_cache_spec, ssm_cache_specs,
+)

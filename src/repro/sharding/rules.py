@@ -1,0 +1,161 @@
+"""Logical-axis -> mesh-axis sharding rules (DESIGN.md §6).
+
+Tensor parallelism lives on the ``model`` axis (heads / kv / ffn /
+experts / vocab / ssm_inner); parameters are additionally FSDP-sharded
+along their ``embed`` dimension over ``data`` (and ``pod`` when
+present).  Activations shard batch over (pod, data); long-context
+decode (batch=1) shards the KV-cache sequence dimension over ``data``
+instead.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Tuple[Optional[str], ...]
+
+
+def _is_logical(x) -> bool:
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+
+
+def default_rules(mesh: Mesh) -> Dict[Optional[str], Any]:
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    fsdp = fsdp if len(fsdp) > 1 else (fsdp[0] if fsdp else None)
+    return {
+        "embed": fsdp,          # FSDP over data(+pod)
+        "heads": "model",
+        "kv": "model",
+        "ffn": "model",
+        "vocab": "model",
+        "experts": "model",
+        "ssm_inner": "model",
+        None: None,
+    }
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def logical_to_pspec(
+    logical: Logical, rules: Dict, shape: Optional[Tuple[int, ...]] = None,
+    mesh: Optional[Mesh] = None,
+) -> P:
+    """Resolve logical axes; drop mesh axes that do not divide the dim
+    (explicit pjit in_shardings must divide evenly — e.g. the 50280
+    vocab of mamba2 is not divisible by the 16-way model axis)."""
+    entries = []
+    for i, ax in enumerate(logical):
+        e = rules.get(ax, None)
+        if e is not None and shape is not None and mesh is not None:
+            if shape[i] % _axis_size(mesh, e) != 0:
+                e = None
+        entries.append(e)
+    return P(*entries)
+
+
+def param_shardings(
+    specs_tree: Any, mesh: Mesh, rules: Optional[Dict] = None,
+    params_tree: Any = None,
+):
+    """Map the logical-spec pytree (from init) to NamedSharding leaves.
+
+    ``params_tree`` (abstract or real) enables divisibility checks.
+    """
+    rules = rules or default_rules(mesh)
+    if params_tree is None:
+        f = lambda logical: NamedSharding(mesh, logical_to_pspec(logical, rules))
+        return jax.tree_util.tree_map(f, specs_tree, is_leaf=_is_logical)
+    flat_s, treedef = jax.tree_util.tree_flatten(
+        specs_tree, is_leaf=_is_logical
+    )
+    flat_p = treedef.flatten_up_to(params_tree)
+    out = [
+        NamedSharding(mesh, logical_to_pspec(s, rules, tuple(p.shape), mesh))
+        for s, p in zip(flat_s, flat_p)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_pspecs(specs_tree: Any, mesh: Mesh, rules: Optional[Dict] = None):
+    rules = rules or default_rules(mesh)
+    return jax.tree_util.tree_map(
+        lambda l: logical_to_pspec(l, rules), specs_tree, is_leaf=_is_logical
+    )
+
+
+# ----------------------------------------------------------------------
+# Activation / batch / cache shardings
+# ----------------------------------------------------------------------
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_spec(mesh: Mesh, batch: int, rank: int) -> P:
+    """Shard dim 0 (batch) over (pod, data) when divisible."""
+    ba = batch_axes(mesh)
+    size = 1
+    for a in ba:
+        size *= mesh.shape[a]
+    first = ba if batch % size == 0 and batch >= size else (
+        ("data",) if batch % mesh.shape["data"] == 0 and batch >= mesh.shape["data"] else None
+    )
+    if first is not None and not isinstance(first, tuple):
+        first = (first,)
+    return P(first, *(None,) * (rank - 1))
+
+
+def kv_cache_spec(
+    mesh: Mesh, batch: int, *, seq_shard: bool,
+    n_kv: int = 0, d_head: int = 0,
+) -> P:
+    """(R, B, S, K, dh) cache sharding.
+
+    Large-batch decode: shard batch on data.  batch==1 long-context:
+    shard the sequence dim on data instead (flash-decoding style).
+    The head axis prefers K on 'model'; when K doesn't divide the model
+    axis (e.g. 8 kv-heads over 16-way TP) it shards d_head instead.
+    """
+    m = mesh.shape["model"]
+    if n_kv and n_kv % m == 0:
+        head_ax, dh_ax = "model", None
+    elif d_head and d_head % m == 0:
+        head_ax, dh_ax = None, "model"
+    else:
+        head_ax, dh_ax = None, None
+    ba = batch_axes(mesh)
+    size = 1
+    for a in ba:
+        size *= mesh.shape[a]
+    if not seq_shard and batch % size == 0 and batch >= size:
+        return P(None, ba, None, head_ax, dh_ax)
+    if seq_shard:
+        return P(None, None, "data", head_ax, dh_ax)
+    return P(None, None, None, head_ax, dh_ax)
+
+
+def ssm_cache_specs(
+    mesh: Mesh, batch: int, n_heads: int = 0, conv_dim: int = 0,
+) -> Tuple[P, P]:
+    """conv (R, B, K-1, C) and ssm (R, B, H, P, N) state shardings."""
+    m = mesh.shape["model"]
+    c_ax = "model" if (conv_dim == 0 or conv_dim % m == 0) else None
+    h_ax = "model" if (n_heads == 0 or n_heads % m == 0) else None
+    ba = batch_axes(mesh)
+    size = 1
+    for a in ba:
+        size *= mesh.shape[a]
+    if batch % size == 0 and batch >= size:
+        return P(None, ba, None, c_ax), P(None, ba, h_ax, None, None)
+    return P(None, None, None, c_ax), P(None, None, h_ax, None, None)

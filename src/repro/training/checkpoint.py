@@ -1,0 +1,52 @@
+"""Flat-npz checkpointing for param/optimizer pytrees (no orbax here)."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out = {}
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in paths:
+        key = "/".join(str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.astype(np.float32)  # npz cannot store ml_dtypes;
+            # the load path casts back per the template dtype (lossless).
+        out[prefix + key] = arr
+    return out
+
+
+def save(path: str, params: Any, opt_state: Any = None, step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = _flatten(params, "params/")
+    if opt_state is not None:
+        arrays.update(_flatten(opt_state, "opt/"))
+    arrays["__step__"] = np.asarray(step)
+    np.savez(path, **arrays)
+
+
+def load(path: str, params_template: Any, opt_template: Any = None):
+    """Restore into the structure of the given templates."""
+    data = np.load(path, allow_pickle=False)
+
+    def restore(template, prefix):
+        paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for path, leaf in paths:
+            key = prefix + "/".join(str(p) for p in path)
+            arr = data[key]
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    params = restore(params_template, "params/")
+    step = int(data["__step__"])
+    if opt_template is not None:
+        return params, restore(opt_template, "opt/"), step
+    return params, step

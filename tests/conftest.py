@@ -1,0 +1,15 @@
+import os
+
+# Tests run on the single host CPU device; the 512-device override is
+# reserved for launch/dryrun.py (see its module docstring).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

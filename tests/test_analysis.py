@@ -1,0 +1,64 @@
+"""Roofline analysis unit tests (parser already covered in
+test_sharding; here: report math + assembly)."""
+import numpy as np
+
+from repro.analysis.hlo import _shape_table, collective_bytes
+from repro.analysis.roofline import PartCost, Report, assemble, HBM_BW, LINK_BW, PEAK_FLOPS
+
+
+def test_report_terms_and_dominance():
+    r = Report(arch="a", shape="s", mesh="single", chips=256, ok=True)
+    r.flops_per_device = 197e12          # exactly 1s of compute
+    r.bytes_per_device = 819e9 * 2       # 2s of HBM
+    r.coll_bytes_per_device = 50e9 * 0.5  # 0.5s of ICI
+    assert abs(r.t_compute - 1.0) < 1e-6
+    assert abs(r.t_memory - 2.0) < 1e-6
+    assert abs(r.t_collective - 0.5) < 1e-6
+    assert r.dominant == "memory"
+
+
+def test_useful_ratio():
+    r = Report(arch="a", shape="s", mesh="single", chips=2, ok=True)
+    r.flops_per_device = 100.0
+    r.model_flops = 150.0
+    assert abs(r.useful_ratio - 0.75) < 1e-9
+
+
+def test_assemble_multipliers():
+    r = Report(arch="a", shape="s", mesh="single", chips=1, ok=True)
+    parts = [
+        PartCost("embed", 1, flops=10, bytes_accessed=5,
+                 coll_operand_bytes=1, coll_detail={}),
+        PartCost("layer0", 30, flops=100, bytes_accessed=50,
+                 coll_operand_bytes=2, coll_detail={}),
+    ]
+    assemble(r, parts)
+    assert r.flops_per_device == 10 + 30 * 100
+    assert r.bytes_per_device == 5 + 30 * 50
+    assert r.coll_bytes_per_device == 1 + 30 * 2
+
+
+def test_shape_table_and_named_operands():
+    txt = """
+  %x.1 = bf16[16,1024]{1,0} parameter(0)
+  %conv = f32[16,1024]{1,0} convert(%x.1)
+  %all-gather.7 = f32[256,1024]{1,0} all-gather(%conv), channel_id=1
+  %ar = f32[4]{0} all-reduce(%small), to_apply=%add
+  %small = f32[4]{0} constant({1,2,3,4})
+"""
+    table = _shape_table(txt)
+    assert table["conv"] == 16 * 1024 * 4
+    d = collective_bytes(txt)
+    assert d["all-gather"]["operand_bytes"] == 16 * 1024 * 4   # via table
+    assert d["all-gather"]["result_bytes"] == 256 * 1024 * 4
+    assert d["all-reduce"]["operand_bytes"] == 16               # via table
+
+
+def test_async_done_not_double_counted():
+    txt = """
+  %ag-start = f32[8]{0} all-gather-start(%a)
+  %a = f32[8]{0} parameter(0)
+  %ag-done = f32[8]{0} all-gather-done(%ag-start)
+"""
+    d = collective_bytes(txt)
+    assert d["all-gather"]["count"] == 1

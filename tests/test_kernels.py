@@ -1,0 +1,169 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes and dtypes, plus hypothesis properties on the math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_prefill import flash_prefill_pallas
+from repro.kernels.mv_sad import mv_sad_pallas
+from repro.kernels.rope_shift import rope_shift_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+# ----------------------------------------------------------------------
+# mv_sad
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("hw,block,radius", [
+    ((64, 64), 16, 4), ((64, 96), 16, 2), ((32, 32), 8, 3), ((48, 80), 16, 4),
+])
+def test_mv_sad_matches_ref(hw, block, radius):
+    k = jax.random.PRNGKey(hash((hw, block, radius)) % 2**31)
+    cur = jax.random.uniform(k, hw) * 255
+    prev = jnp.roll(cur, (1, -2), (0, 1)) + jax.random.normal(k, hw)
+    mv_p, sad_p = mv_sad_pallas(cur, prev, block=block, radius=radius, interpret=True)
+    mv_r, sad_r = ref.mv_sad_ref(cur, prev, block, radius)
+    np.testing.assert_array_equal(np.asarray(mv_p), np.asarray(mv_r))
+    np.testing.assert_allclose(np.asarray(sad_p), np.asarray(sad_r), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dy=st.integers(-3, 3), dx=st.integers(-3, 3))
+def test_mv_sad_recovers_pure_translation(dy, dx):
+    """Property: for prev = roll(cur, (dy, dx)), interior blocks must
+    report exactly (dy, dx)."""
+    k = jax.random.PRNGKey(abs(dy * 7 + dx) + 1)
+    cur = jax.random.uniform(k, (64, 64)) * 255
+    prev = jnp.roll(cur, (dy, dx), (0, 1))
+    mv, sad = ref.mv_sad_ref(cur, prev, 16, 4)
+    interior = np.asarray(mv)[1:-1, 1:-1]
+    assert (interior[..., 0] == dy).all() and (interior[..., 1] == dx).all()
+    assert float(np.asarray(sad)[1:-1, 1:-1].max()) == 0.0
+
+
+# ----------------------------------------------------------------------
+# rope_shift
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(1, 128, 2, 32), (2, 256, 4, 64), (3, 64, 1, 128)])
+def test_rope_shift_matches_ref(shape, dtype):
+    k = jax.random.PRNGKey(0)
+    kk = jax.random.normal(k, shape).astype(dtype)
+    d = jax.random.randint(k, shape[:2], -500, 500)
+    out_p = rope_shift_pallas(kk, d, seq_tile=min(64, shape[1]), interpret=True)
+    out_r = ref.rope_shift_ref(kk, d)
+    np.testing.assert_allclose(
+        np.asarray(out_p, np.float32), np.asarray(out_r, np.float32),
+        atol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(d1=st.integers(-1000, 1000), d2=st.integers(-1000, 1000))
+def test_rope_shift_composes(d1, d2):
+    """R(d1) . R(d2) == R(d1 + d2) — the property Eq. 5 relies on."""
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, 8, 2, 16))
+    da = jnp.full((1, 8), d1, jnp.int32)
+    db = jnp.full((1, 8), d2, jnp.int32)
+    a = ref.rope_shift_ref(ref.rope_shift_ref(k, da), db)
+    b = ref.rope_shift_ref(k, da + db)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+
+def test_rope_shift_zero_is_identity():
+    k = jax.random.normal(jax.random.PRNGKey(4), (2, 16, 2, 32))
+    out = ref.rope_shift_ref(k, jnp.zeros((2, 16), jnp.int32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(k), atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# flash_prefill
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sq,sk,h,hkv,d", [
+    (128, 128, 4, 2, 32), (256, 256, 2, 2, 64), (128, 256, 8, 2, 32),
+])
+def test_flash_matches_ref(sq, sk, h, hkv, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, sq, h, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (2, sk, hkv, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (2, sk, hkv, d)).astype(dtype)
+    off = sk - sq
+    o_p = flash_prefill_pallas(q, k, v, q_offset=off, interpret=True)
+    o_r = ref.flash_prefill_ref(q, k, v, q_offset=off)
+    np.testing.assert_allclose(
+        np.asarray(o_p, np.float32), np.asarray(o_r, np.float32),
+        atol=3e-2 if dtype == jnp.bfloat16 else 1e-5,
+    )
+
+
+def test_flash_sliding_window():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 32))
+    k = jax.random.normal(ks[1], (1, 256, 2, 32))
+    v = jax.random.normal(ks[2], (1, 256, 2, 32))
+    o_p = flash_prefill_pallas(q, k, v, window=64, interpret=True)
+    o_r = ref.flash_prefill_ref(q, k, v, window=64)
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_r), atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# ssd_scan
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("L,H,P,N,G,chunk", [
+    (128, 4, 16, 8, 1, 32), (256, 4, 8, 16, 2, 64), (64, 2, 32, 8, 2, 16),
+])
+def test_ssd_matches_exact_recurrence(L, H, P, N, G, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    B = 2
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    la = -jnp.abs(jax.random.normal(ks[1], (B, L, H))) * 0.3
+    b = jax.random.normal(ks[2], (B, L, G, N)) * 0.5
+    c = jax.random.normal(ks[3], (B, L, G, N)) * 0.5
+    init = jax.random.normal(ks[4], (B, H, P, N)) * 0.1
+    y_p, s_p = ssd_scan_pallas(x, la, b, c, init, chunk=chunk, n_groups=G,
+                               interpret=True)
+    bf = jnp.repeat(b, H // G, 2)
+    cf = jnp.repeat(c, H // G, 2)
+    y_r, s_r = ref.ssd_scan_ref(x, la, bf, cf, init)
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_r), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_r), atol=2e-4)
+
+
+def test_ssd_decode_consistent_with_scan():
+    """Property: running the chunked scan over L steps equals applying
+    the single-step decode L times."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    B, L, H, P, N = 1, 16, 2, 8, 4
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    la = -jnp.abs(jax.random.normal(ks[1], (B, L, H))) * 0.3
+    b = jax.random.normal(ks[2], (B, L, H, N)) * 0.5
+    c = jax.random.normal(ks[3], (B, L, H, N)) * 0.5
+    y_scan, s_scan = ref.ssd_chunked_ref(x, la, b, c, 4)
+    state = jnp.zeros((B, H, P, N))
+    ys = []
+    for t in range(L):
+        y, state = ref.ssd_decode_ref(state, x[:, t], la[:, t], b[:, t], c[:, t])
+        ys.append(y)
+    y_step = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_step), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_scan), np.asarray(state), atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_ssd_identity_padding_property(seed):
+    """Appending identity steps (log_a=0, x=b=0) must not change the
+    final state — the property ops.ssd_scan's padding relies on."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    B, L, H, P, N = 1, 12, 2, 4, 4
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    la = -jnp.abs(jax.random.normal(ks[1], (B, L, H)))
+    b = jax.random.normal(ks[2], (B, L, H, N))
+    c = jax.random.normal(ks[3], (B, L, H, N))
+    _, s1 = ref.ssd_scan_ref(x, la, b, c)
+    pad = lambda a: jnp.pad(a, ((0, 0), (0, 4)) + ((0, 0),) * (a.ndim - 2))
+    _, s2 = ref.ssd_scan_ref(pad(x), pad(la), pad(b), pad(c))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-5)
