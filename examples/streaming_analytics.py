@@ -3,21 +3,23 @@
     PYTHONPATH=src python examples/streaming_analytics.py [--mode codecflow]
 
 The paper's deployment scenario: N concurrent CCTV streams served by one
-engine; windows are replayed in arrival order (streaming request
-generation, paper §5), decisions and per-stage costs reported per system
-variant.  This is the serving analogue of 'train a 100M model': the
-complete production path — codec, motion analysis, pruned ViT, selective
-KVC refresh, decode — on every window of every stream.
+stage pipeline behind a batched scheduler.  Each stream is a
+``StreamSession`` (per-stream codec buffer + KVC state); the scheduler
+interleaves windows in arrival order and fuses ready windows of
+same-phase streams into single batched ViT-encode / prefill / decode
+calls — the production path replacing the per-stream batch=1 loop.
 """
 import argparse
 import time
 
 import numpy as np
 
-from repro.configs.base import CodecCfg
 from repro.data.pipeline import anomaly_dataset
-from repro.launch.serve import build_engine
-from repro.serving import precision_recall_f1, video_prediction
+from repro.configs.base import CodecCfg
+from repro.launch.serve import build_pipeline
+from repro.serving import (
+    Scheduler, StreamRequest, precision_recall_f1, video_prediction,
+)
 
 
 def main() -> None:
@@ -31,43 +33,34 @@ def main() -> None:
     args = ap.parse_args()
 
     codec = CodecCfg(gop=4, window_frames=8, stride_frames=4, keep_ratio=0.5)
-    engine = build_engine(args.arch, args.mode, codec)
+    pipeline = build_pipeline(args.arch, args.mode, codec)
     streams = anomaly_dataset(args.streams, args.frames, 112, 112, seed=42)
 
-    # streaming replay: interleave windows across streams (arrival order)
-    sessions = [
-        {"frames": f, "label": l, "answers": [], "state": None, "k": 0}
-        for f, l in streams
-    ]
+    # session lifecycle: submit (codec ingest) -> poll (batched windows)
+    sched = Scheduler(pipeline, max_concurrent=args.streams)
     t0 = time.time()
+    sids = [
+        sched.submit(StreamRequest(f"cam-{i}", np.asarray(frames), tag=label))
+        for i, (frames, label) in enumerate(streams)
+    ]
     total_flops = 0.0
-    # pre-encode every stream once (single-pass codec front end)
-    from repro.codec import StreamDecoder, encode_stream
-    import jax.numpy as jnp
-
-    decoders = []
-    for s in sessions:
-        bs, md = encode_stream(jnp.asarray(s["frames"], jnp.float32), codec)
-        dec = StreamDecoder(codec)
-        dec.ingest(bs, md)
-        decoders.append(dec)
-
-    n_windows = min(d.n_windows() for d in decoders)
-    for k in range(n_windows):
-        for i, s in enumerate(sessions):
-            wframes, wmeta = decoders[i].window(k)
-            stats, s["state"] = engine.serve_window(
-                k, jnp.asarray(wframes), wmeta, s["state"])
-            s["answers"].append(stats.answer)
-            total_flops += stats.flops_vit + stats.flops_prefill + stats.flops_decode
-
-    preds = [video_prediction(s["answers"]) for s in sessions]
-    truths = [s["label"] for s in sessions]
-    p, r, f1 = precision_recall_f1(preds, truths)
+    while not sched.idle:
+        for res in sched.poll():
+            s = res.stats
+            total_flops += s.flops_vit + s.flops_prefill + s.flops_decode
     wall = time.time() - t0
+
+    preds, truths = [], []
+    n_windows = 0
+    for sid in sids:
+        truths.append(sched.session(sid).request.tag)
+        results = sched.close(sid)          # releases the session's KV state
+        preds.append(video_prediction([r.stats.answer for r in results]))
+        n_windows += len(results)
+    p, r, f1 = precision_recall_f1(preds, truths)
     print(f"mode={args.mode} arch={args.arch}")
-    print(f"streams={len(sessions)} windows/stream={n_windows} "
-          f"wall={wall:.1f}s ({wall / (len(sessions) * n_windows):.2f}s/window)")
+    print(f"streams={len(sids)} windows={n_windows} wall={wall:.1f}s "
+          f"({n_windows / max(wall, 1e-9):.2f} windows/s aggregate)")
     print(f"decisions={preds} truths={truths}  P={p:.2f} R={r:.2f} F1={f1:.2f}")
     print(f"total GFLOP={total_flops / 1e9:.2f}")
 

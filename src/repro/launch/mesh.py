@@ -2,20 +2,34 @@
 time, so importing this module does not touch jax device state)."""
 from __future__ import annotations
 
+import inspect
+
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 exposes explicit axis types
+    from jax.sharding import AxisType
+except ImportError:  # older jax: every mesh axis is implicitly "auto"
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    """Version-compatible ``jax.make_mesh``: pass ``axis_types`` only on
+    jax versions that define it (all axes Auto either way)."""
+    if (AxisType is not None
+            and "axis_types" in inspect.signature(jax.make_mesh).parameters):
+        return jax.make_mesh(
+            shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod; multi_pod stacks 2 pods = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Degenerate 1-device mesh for CPU smoke tests."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _make_mesh((1, 1), ("data", "model"))

@@ -1,8 +1,23 @@
-from .engine import Engine, EngineCfg, WindowStats, QUERY_IDS, YES, NO
+from .api import (
+    AttentionPrefill, CodecFrontend, CodecStream, EngineCfg, GreedyDecoder,
+    PrefillBackend, PrefillResult, RecurrentPrefill, ServingPipeline,
+    StreamRequest, StreamSession, VisualEncoder, WindowResult, WindowStats,
+    MODES, QUERY_IDS, YES, NO,
+)
+from .engine import Engine
+from .scheduler import Scheduler
 from .metrics import precision_recall_f1, video_prediction, agreement
 from . import flops
 
 __all__ = [
+    # legacy single-stream surface
     "Engine", "EngineCfg", "WindowStats", "QUERY_IDS", "YES", "NO",
+    # session-based multi-stream API
+    "ServingPipeline", "Scheduler", "StreamRequest", "StreamSession",
+    "WindowResult", "MODES",
+    # stages
+    "CodecFrontend", "CodecStream", "VisualEncoder", "PrefillBackend",
+    "PrefillResult", "AttentionPrefill", "RecurrentPrefill", "GreedyDecoder",
+    # metrics
     "precision_recall_f1", "video_prediction", "agreement", "flops",
 ]

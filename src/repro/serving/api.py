@@ -1,0 +1,684 @@
+"""Composable serving stages + per-stream session state (paper Fig. 8).
+
+The monolithic ``Engine`` is split into four typed stages so a scheduler
+can batch work across concurrent streams at each stage boundary:
+
+  CodecFrontend           encode/ingest + single-pass decode + window
+      |                   slicing; codec metadata; ingest-time
+      v                   amortization lives HERE, not in the engine.
+  VisualEncoder           full (I-frame) / pruned (P-frame) ViT encode,
+      |                   batched over streams x frames.
+      v
+  PrefillBackend          one protocol, two implementations:
+      |                     * AttentionPrefill — fresh prefill and
+      |                       KVC reuse + selective refresh (Eq. 5).
+      |                     * RecurrentPrefill — SSM/hybrid boundary-
+      v                       state streaming (DESIGN.md §4).
+  GreedyDecoder           answer extraction + greedy continuation.
+
+``ServingPipeline`` composes the stages and serves a *batch* of windows
+(one per stream, same layout/phase) in single jitted calls; batch size 1
+reproduces the legacy per-stream path exactly.  ``repro.serving.engine``
+keeps ``Engine`` as a thin compatibility wrapper, and
+``repro.serving.scheduler`` drives N concurrent ``StreamSession``s
+through the batched path.
+
+Modes (paper §5 Baselines): ``codecflow`` | ``fullcomp`` | ``prune_only``
+| ``refresh_only`` | ``cacheblend`` | ``vlcache`` — semantics unchanged
+from the monolith (see module docstring history in engine.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import (
+    Any, Dict, List, NamedTuple, Optional, Protocol, Sequence, Tuple,
+)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import CodecCfg, ModelCfg, ViTCfg
+from ..codec import StreamDecoder, encode_stream
+from ..codec.metadata import CodecMetadata
+from ..core import (
+    WindowLayout, capacity_groups, motion_mask, reuse_caches, select_tokens,
+)
+from ..models import layers
+from ..models import transformer as tfm
+from ..models import vit as vitm
+from . import flops as flopcount
+
+F32 = jnp.float32
+
+# token conventions for the anomaly-detection workload
+PAD, BOS, YES, NO = 0, 1, 2, 3
+QUERY_IDS = (5, 6, 7, 8, 9, 10, 11, 12)   # "describe ... abuse? yes/no"
+
+MODES = ("codecflow", "fullcomp", "prune_only", "refresh_only",
+         "cacheblend", "vlcache")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineCfg:
+    mode: str = "codecflow"
+    codec: CodecCfg = CodecCfg()
+    max_new_tokens: int = 1
+    cacheblend_ratio: float = 0.15   # refresh budget for the baseline
+    vlcache_ratio: float = 0.15
+    q_chunk: int = 1024
+
+
+@dataclasses.dataclass
+class WindowStats:
+    answer: int
+    logits_yes_no: Tuple[float, float]
+    tokens_vis: int
+    tokens_valid: int
+    tokens_refreshed: int
+    vit_patches: int
+    flops_vit: float
+    flops_prefill: float
+    flops_decode: float
+    t_codec: float
+    t_vit: float
+    t_prefill: float
+    t_decode: float
+    t_overhead: float
+
+
+# ======================================================================
+# Session dataclasses
+# ======================================================================
+@dataclasses.dataclass(frozen=True)
+class StreamRequest:
+    """One stream of raw luma frames submitted to the scheduler."""
+
+    stream_id: Any
+    frames: np.ndarray               # (T, H, W) raw luma in [0, 255]
+    tag: Any = None                  # opaque caller payload (e.g. label)
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowResult:
+    """Per-window outcome delivered by ``Scheduler.poll``."""
+
+    stream_id: Any
+    session_id: int
+    window: int
+    stats: WindowStats
+
+
+@dataclasses.dataclass
+class CodecStream:
+    """Codec front-end state: the single-pass decode buffer + metadata."""
+
+    decoder: StreamDecoder
+    t_ingest: float                  # encode + single-pass decode wall time
+    n_windows: int
+
+
+class StreamSession:
+    """Per-stream serving state: codec buffer + KVC/layout state.
+
+    Lifecycle: ``Scheduler.submit`` creates the session (codec ingest),
+    the scheduler drives it window-by-window through the batched stage
+    pipeline, and ``Scheduler.close`` releases its cache state.
+    """
+
+    def __init__(self, sid: int, request: StreamRequest, stream: CodecStream):
+        self.sid = sid
+        self.request = request
+        self.stream = stream
+        self.next_window = 0
+        self.state: Optional[Dict[str, Any]] = None   # backend KV state
+        self.results: List[WindowResult] = []
+
+    @property
+    def done(self) -> bool:
+        return self.next_window >= self.stream.n_windows
+
+    @property
+    def answers(self) -> List[int]:
+        return [r.stats.answer for r in self.results]
+
+
+# ======================================================================
+# Stage 1: codec front end
+# ======================================================================
+class CodecFrontend:
+    """Encode/ingest + single-pass decode + sliding-window slicing.
+
+    Owns codec-time accounting: ingest cost is amortized over the
+    stream's windows *at this stage* so per-window timings are
+    attributed where they were incurred.
+    """
+
+    def __init__(self, codec: CodecCfg):
+        self.codec = codec
+
+    def open(self, frames: np.ndarray) -> CodecStream:
+        t0 = time.perf_counter()
+        bs, meta = encode_stream(jnp.asarray(frames, F32), self.codec)
+        dec = StreamDecoder(self.codec)
+        dec.ingest(bs, meta)
+        return CodecStream(dec, time.perf_counter() - t0, dec.n_windows())
+
+    def window(
+        self, cs: CodecStream, k: int
+    ) -> Tuple[jnp.ndarray, CodecMetadata, float]:
+        """k-th window: (frames (W, H, Wd), metadata, amortized t_codec)."""
+        wframes, wmeta = cs.decoder.window(k)
+        return jnp.asarray(wframes), wmeta, cs.t_ingest / max(cs.n_windows, 1)
+
+
+# ======================================================================
+# Stage 2: visual encoder
+# ======================================================================
+class VisualEncoder:
+    """Full/pruned ViT encode of window frames, batched across streams.
+
+    Frames are batched by coding type: all I-frames of all streams in
+    one full-capacity ViT call, all P-frames in one pruned call — two
+    jit invocations per *batch of windows* instead of two per stream.
+    """
+
+    def __init__(self, v: ViTCfg, vparams, codec: CodecCfg,
+                 layout: WindowLayout, prune: bool):
+        self.v = v
+        self.vparams = vparams
+        self.codec = codec
+        self.layout = layout
+        self.prune = prune
+        self._jit_full = jax.jit(lambda vp, f: vitm.encode_full(vp, v, f))
+        self._jit_pruned = jax.jit(
+            lambda vp, f, pi, pv: vitm.encode_pruned_tokens(vp, v, f, pi, pv)
+        )
+
+    def encode(
+        self,
+        frames: jnp.ndarray,                 # (S, W, H, Wd)
+        metas: Sequence[CodecMetadata],      # len S, per-window metadata
+        frame_range: range,
+    ) -> Tuple[jnp.ndarray, jnp.ndarray, np.ndarray]:
+        """Encode frames [range) of every stream's window.
+
+        Returns (embeds (S, n_tok, d), valid (S, n_tok), patches (S,)):
+        per-stream token embeds packed per the layout.
+        """
+        lay, v = self.layout, self.v
+        S = frames.shape[0]
+        i_idx = [f for f in frame_range if lay.frame_is_i(f) or not self.prune]
+        p_idx = [f for f in frame_range if f not in i_idx]
+        toks_by_frame: dict = {}
+        val_by_frame: dict = {}
+        patches = np.zeros((S,), np.int64)
+
+        if i_idx:
+            sel = frames[:, jnp.asarray(i_idx)]              # (S, Ni, H, Wd)
+            batch = sel.reshape((S * len(i_idx),) + sel.shape[2:])
+            toks = self._jit_full(self.vparams, batch)       # (S*Ni, G, d)
+            toks = toks.reshape((S, len(i_idx)) + toks.shape[1:])
+            for j, f in enumerate(i_idx):
+                n_tok = lay.frame_tokens[f]
+                toks_by_frame[f] = toks[:, j, :n_tok]
+                val_by_frame[f] = jnp.ones((S, n_tok), bool)
+            patches += len(i_idx) * v.n_patches
+
+        if p_idx:
+            dyn, sco = [], []
+            for m in metas:
+                d, s = motion_mask(m, self.codec, v.patches_per_side)
+                dyn.append(d)
+                sco.append(s)
+            dyn = jnp.stack(dyn)                             # (S, W, pp, pp)
+            sco = jnp.stack(sco)
+            pj = jnp.asarray(p_idx)
+            Np = len(p_idx)
+            dsel = dyn[:, pj].reshape((S * Np,) + dyn.shape[2:])
+            ssel = sco[:, pj].reshape((S * Np,) + sco.shape[2:])
+            dec = select_tokens(dsel, ssel, v, lay.k_tokens)
+            toks_full = self._jit_pruned(
+                self.vparams, frames[:, pj].reshape((S * Np,) + frames.shape[2:]),
+                dec.patch_idx, dec.patch_valid,
+            )                                                # (S*Np, G, d)
+            toks = jnp.take_along_axis(toks_full, dec.group_idx[..., None], 1)
+            toks = toks.reshape((S, Np) + toks.shape[1:])
+            gval = dec.group_valid.reshape(S, Np, -1)
+            patches += np.asarray(
+                dec.patch_valid.reshape(S, -1).sum(axis=1), np.int64
+            )
+            for j, f in enumerate(p_idx):
+                n_tok = lay.frame_tokens[f]
+                toks_by_frame[f] = toks[:, j, :n_tok]
+                val_by_frame[f] = gval[:, j, :n_tok]
+
+        embeds = jnp.concatenate([toks_by_frame[f] for f in frame_range], 1)
+        valids = jnp.concatenate([val_by_frame[f] for f in frame_range], 1)
+        return embeds, valids, patches
+
+
+# ======================================================================
+# Stage 3: prefill backends (one protocol, two families)
+# ======================================================================
+class PrefillResult(NamedTuple):
+    """Uniform output of a prefill backend for one batch of windows."""
+
+    logits: jnp.ndarray          # (S, V) last-position logits
+    decode_caches: Any           # caches the decoder continues from
+    decode_start: int            # position of the first decoded token
+    flops_len: Any               # i -> attended context len of step i
+    state: Dict[str, Any]        # batched per-stream state for window k+1
+    tokens_vis: int              # visual tokens processed this window
+    tokens_valid: np.ndarray     # (S,) valid-token count per stream
+    n_refreshed: int             # tokens recomputed through the LLM
+    flops: float                 # prefill FLOPs per stream
+    t_select: float              # measured refresh-selection overhead
+
+
+class PrefillBackend(Protocol):
+    """LLM context construction over a batch of same-layout windows.
+
+    One protocol, two implementations (attention KVC reuse vs
+    SSM/hybrid boundary-state streaming).  ``fresh`` consumes the full
+    window's visual tokens, ``step`` only the new-stride tokens plus the
+    previous window's ``state``; both take query embeds ``qe`` and
+    return a ``PrefillResult``.  ``absorb_decode`` folds the decoder's
+    cache mutations back into the stream state (a no-op for backends
+    that fork the query/decode cache).
+    """
+
+    batchable_step: bool
+
+    def fresh(self, vis, vval, qe) -> PrefillResult: ...
+    def step(self, vis, vval, qe, state) -> PrefillResult: ...
+    def absorb_decode(self, state, caches) -> None: ...
+
+
+class AttentionPrefill:
+    """Fresh prefill + windowed KVC reuse / selective refresh (Eq. 5)."""
+
+    def __init__(self, cfg: ModelCfg, params, layout: WindowLayout,
+                 ecfg: EngineCfg):
+        self.cfg = cfg
+        self.params = params
+        self.layout = layout
+        self.ecfg = ecfg
+        self.cache_slots = layout.total_len + ecfg.max_new_tokens
+        qc = ecfg.q_chunk
+        self._jit_prefill = jax.jit(
+            lambda params, tokens, caches, valid, embeds, off: tfm.prefill(
+                cfg, params, tokens, caches, valid=valid,
+                inputs_embeds=embeds, cache_offset=off, q_chunk=qc,
+            )
+        )
+        self._jit_reuse = jax.jit(lambda caches: reuse_caches(cfg, caches, layout))
+
+        def selective(params, caches, remb, rval, kvv, idx):
+            B = remb.shape[0]
+            positions = jnp.broadcast_to(idx[None], (B, idx.shape[0]))
+            kv_full = kvv.at[:, idx].set(rval)
+            h = remb.astype(params["embed"].dtype)
+            h, new_caches, _ = tfm.run_stack(
+                cfg, params, h, positions, None, caches,
+                cache_offset=None, cache_len=layout.total_len,
+                scatter_idx=idx, kv_valid=kv_full, q_chunk=qc,
+            )
+            hn = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+            logits = tfm.lm_logits(cfg, params, hn[:, -1])
+            return logits, new_caches, h
+
+        self._jit_selective = jax.jit(selective)
+
+    def _result(self, logits, vis, vval, caches, kv_valid, valid,
+                n_refreshed, flops, t_select) -> PrefillResult:
+        lay = self.layout
+        state = {"vis": vis, "vval": vval, "caches": caches,
+                 "kv_valid": kv_valid}
+        return PrefillResult(
+            logits=logits, decode_caches=caches,
+            decode_start=lay.total_len,
+            flops_len=lambda i: lay.total_len + i + 1,
+            state=state, tokens_vis=lay.vis_len,
+            tokens_valid=np.asarray(valid.sum(axis=1)),
+            n_refreshed=n_refreshed, flops=flops, t_select=t_select,
+        )
+
+    # -- fresh window --------------------------------------------------
+    def fresh(self, vis: jnp.ndarray, vval: jnp.ndarray,
+              qe: jnp.ndarray) -> PrefillResult:
+        lay, alloc = self.layout, self.cache_slots
+        S = vis.shape[0]
+        embeds = jnp.concatenate([vis, qe], 1)
+        valid = jnp.concatenate(
+            [vval, jnp.ones((S, lay.query_len), bool)], 1
+        )
+        caches = tfm.init_caches(self.cfg, S, alloc)
+        logits, caches, _ = self._jit_prefill(
+            self.params, jnp.zeros((S, lay.total_len), jnp.int32),
+            caches, valid, embeds, 0,
+        )
+        kv_valid = jnp.pad(valid, ((0, 0), (0, alloc - lay.total_len)))
+        flops = flopcount.prefill_flops(self.cfg, lay.total_len, lay.total_len)
+        return self._result(logits, vis, vval, caches, kv_valid, valid,
+                            lay.total_len, flops, 0.0)
+
+    # -- incremental window (reuse + selective refresh) ----------------
+    def step(self, vis_new: jnp.ndarray, vval_new: jnp.ndarray,
+             qe: jnp.ndarray, state) -> PrefillResult:
+        lay, alloc = self.layout, self.cache_slots
+        S = vis_new.shape[0]
+        # splice cached overlap embeddings with the new-stride tokens
+        # (the ViT is NOT re-run for the overlap, §3.4.1)
+        vis = jnp.concatenate([state["vis"][:, lay.shift_tokens:], vis_new], 1)
+        vval = jnp.concatenate(
+            [state["vval"][:, lay.shift_tokens:], vval_new], 1
+        )
+        embeds = jnp.concatenate([vis, qe], 1)
+        valid = jnp.concatenate(
+            [vval, jnp.ones((S, lay.query_len), bool)], 1
+        )
+        caches = self._jit_reuse(state["caches"])
+        prev_valid = state["kv_valid"]
+        kvv = jnp.zeros((S, alloc), bool)
+        kvv = kvv.at[:, : lay.overlap_tokens].set(
+            prev_valid[:, lay.shift_tokens: lay.vis_len]
+        )
+        t0 = time.perf_counter()
+        ridx = self.refresh_indices(embeds, caches)
+        t_select = time.perf_counter() - t0
+        remb = jnp.take_along_axis(
+            embeds, jnp.asarray(ridx)[None, :, None], axis=1
+        )
+        rval = jnp.take_along_axis(valid, jnp.asarray(ridx)[None], axis=1)
+        logits, caches, _ = self._jit_selective(
+            self.params, caches, remb, rval, kvv, jnp.asarray(ridx)
+        )
+        kv_valid = kvv.at[:, jnp.asarray(ridx)].set(rval)
+        flops = flopcount.prefill_flops(self.cfg, len(ridx), lay.total_len)
+        return self._result(logits, vis, vval, caches, kv_valid, valid,
+                            len(ridx), flops, t_select)
+
+    def absorb_decode(self, state, caches) -> None:
+        """Decode extends the stream caches in place; the decode slots
+        become valid for the next window's shift."""
+        lay, nd = self.layout, self.ecfg.max_new_tokens
+        state["caches"] = caches
+        state["kv_valid"] = state["kv_valid"].at[
+            :, lay.total_len: lay.total_len + nd
+        ].set(True)
+
+    # -- refresh policy (the *when/where* of C2) -----------------------
+    @property
+    def batchable_step(self) -> bool:
+        """cacheblend ranks per-stream online; its scatter set differs
+        across streams so incremental windows cannot share one call."""
+        return self.ecfg.mode != "cacheblend"
+
+    def refresh_indices(self, embeds, reused_caches) -> np.ndarray:
+        mode, lay = self.ecfg.mode, self.layout
+        if mode in ("codecflow", "refresh_only"):
+            return lay.refresh_token_idx
+        tail = np.arange(lay.overlap_tokens, lay.total_len, dtype=np.int32)
+        budget = len(lay.anchor_token_idx)
+        if mode == "vlcache":
+            r = max(1, int(self.ecfg.vlcache_ratio * lay.overlap_tokens))
+            sel = np.linspace(
+                0, lay.overlap_tokens - 1, min(r, budget) or 1
+            ).astype(np.int32)
+            return np.unique(np.concatenate([sel, tail]))
+        if mode == "cacheblend":
+            assert embeds.shape[0] == 1, "cacheblend refresh is per-stream"
+            # online probe: layer-0 K deviation between the corrected
+            # reused keys and keys recomputed from current embeddings.
+            p0 = jax.tree_util.tree_map(
+                lambda x: x[0], self.params["blocks"][0]
+            )
+            hn = layers.rmsnorm(
+                p0["ln1"], embeds[:, : lay.overlap_tokens], self.cfg.norm_eps
+            )
+            kq = (hn @ p0["mixer"]["wk"]).reshape(
+                1, lay.overlap_tokens, self.cfg.n_kv, self.cfg.d_head
+            )
+            from ..kernels.ref import apply_rope_ref
+            pos = jnp.arange(lay.overlap_tokens)[None]
+            k_new = apply_rope_ref(kq, pos, self.cfg.rope_theta)
+            k_reused = reused_caches.blocks[0].k[0][:, : lay.overlap_tokens]
+            dev = jnp.linalg.norm(
+                (k_new - k_reused.astype(k_new.dtype)).astype(F32),
+                axis=(-1, -2),
+            )[0]
+            top = np.asarray(jnp.argsort(-dev)[:budget], np.int32)
+            return np.unique(np.concatenate([top, tail]))
+        raise ValueError(mode)
+
+
+class RecurrentPrefill:
+    """SSM / hybrid boundary-state streaming (DESIGN.md §4).
+
+    The stream state IS the recurrent cache: each window appends only
+    the new frames; query+decode run on a forked cache so they do not
+    pollute the boundary state.
+    """
+
+    def __init__(self, cfg: ModelCfg, params, layout: WindowLayout,
+                 ecfg: EngineCfg):
+        self.cfg = cfg
+        self.params = params
+        self.layout = layout
+        self.ecfg = ecfg
+        qc = ecfg.q_chunk
+        self._jit_prefill = jax.jit(
+            lambda params, tokens, caches, valid, embeds, off: tfm.prefill(
+                cfg, params, tokens, caches, valid=valid,
+                inputs_embeds=embeds, cache_offset=off, q_chunk=qc,
+            )
+        )
+
+    batchable_step = True
+
+    def default_max_hist(self) -> int:
+        lay = self.layout
+        return 4 * lay.vis_len + lay.query_len + self.ecfg.max_new_tokens
+
+    def fresh(self, vis, vval, qe) -> PrefillResult:
+        return self._append(vis, vval, qe, None)
+
+    def step(self, vis, vval, qe, state) -> PrefillResult:
+        return self._append(vis, vval, qe, state)
+
+    def absorb_decode(self, state, caches) -> None:
+        """No-op: query + decode ran on a forked cache so they do not
+        pollute the boundary state."""
+
+    def _append(self, vis, vval, qe, state) -> PrefillResult:
+        """Extend the boundary state with new visual tokens, then fork
+        for the query."""
+        lay = self.layout
+        S = vis.shape[0]
+        max_hist = state["max_hist"] if state else self.default_max_hist()
+        if state is None:
+            caches = tfm.init_caches(self.cfg, S, max_hist)
+            offset = 0
+        else:
+            caches = state["caches"]
+            offset = state["offset"]
+        n_new = vis.shape[1]
+        _, caches, _ = self._jit_prefill(
+            self.params, jnp.zeros((S, n_new), jnp.int32), caches,
+            vval, vis, offset,
+        )
+        offset_vis = offset + n_new
+        q_logits, q_caches, _ = self._jit_prefill(
+            self.params, jnp.zeros((S, lay.query_len), jnp.int32), caches,
+            jnp.ones((S, lay.query_len), bool), qe, offset_vis,
+        )
+        flops = flopcount.prefill_flops(
+            self.cfg, n_new + lay.query_len, offset_vis + lay.query_len
+        )
+        return PrefillResult(
+            logits=q_logits, decode_caches=q_caches,
+            decode_start=offset_vis + lay.query_len,
+            flops_len=lambda i: offset_vis + lay.query_len + i,
+            state={"caches": caches, "offset": offset_vis,
+                   "max_hist": max_hist},
+            tokens_vis=n_new,
+            tokens_valid=np.asarray(vval.sum(axis=1)),
+            n_refreshed=n_new + lay.query_len, flops=flops, t_select=0.0,
+        )
+
+
+# ======================================================================
+# Stage 4: decoder
+# ======================================================================
+class GreedyDecoder:
+    """Yes/no answer extraction + greedy continuation, batched."""
+
+    def __init__(self, cfg: ModelCfg, params, ecfg: EngineCfg):
+        self.cfg = cfg
+        self.params = params
+        self.max_new_tokens = ecfg.max_new_tokens
+        self._jit_decode = jax.jit(
+            lambda params, tok, caches, pos: tfm.decode_step(
+                cfg, params, tok, caches, pos
+            )
+        )
+
+    def decode(self, logits: jnp.ndarray, caches, start_pos: int,
+               flops_len) -> Tuple[np.ndarray, np.ndarray, Any, float]:
+        """logits: (S, V) last prefill logits.  ``flops_len(i)`` gives
+        the attended context length of decode step i (family-specific).
+
+        Returns (answers (S,), yes_no (S, 2), caches, flops_decode)."""
+        yes_no = np.asarray(logits[:, (YES, NO)], np.float64)
+        answers = (yes_no[:, 0] > yes_no[:, 1]).astype(np.int64)
+        tok = jnp.asarray(
+            np.where(answers, YES, NO)[:, None], jnp.int32
+        )
+        f_decode = 0.0
+        for i in range(self.max_new_tokens):
+            logits_d, caches = self._jit_decode(
+                self.params, tok, caches, start_pos + i
+            )
+            tok = jnp.argmax(logits_d, -1)[:, None].astype(jnp.int32)
+            f_decode += flopcount.decode_flops(self.cfg, flops_len(i))
+        return answers, yes_no, caches, f_decode
+
+
+# ======================================================================
+# Pipeline: stage composition
+# ======================================================================
+class ServingPipeline:
+    """Composes the four stages; serves a batch of same-phase windows
+    (one per stream) through single jitted stage calls."""
+
+    def __init__(self, cfg: ModelCfg, vit_cfg: ViTCfg, params_lm,
+                 params_vit, ecfg: EngineCfg):
+        assert cfg.vit is None or cfg.vit == vit_cfg
+        assert ecfg.mode in MODES, ecfg.mode
+        self.cfg = cfg
+        self.v = vit_cfg
+        self.params = params_lm
+        self.vparams = params_vit
+        self.ecfg = ecfg
+        c = ecfg.codec
+        prune = ecfg.mode in ("codecflow", "prune_only", "cacheblend", "vlcache")
+        kg = capacity_groups(vit_cfg, c.keep_ratio) if prune else vit_cfg.n_groups
+        self.layout = WindowLayout(
+            window=c.window_frames, stride=c.stride_frames, gop=c.gop,
+            g_tokens=vit_cfg.n_groups, k_tokens=kg,
+            query_len=len(QUERY_IDS),
+        )
+        self.prune = prune
+        self.reuse = ecfg.mode in ("codecflow", "refresh_only", "cacheblend",
+                                   "vlcache")
+        self.is_streaming_family = cfg.family in ("ssm", "hybrid")
+
+        self.frontend = CodecFrontend(c)
+        self.encoder = VisualEncoder(vit_cfg, params_vit, c, self.layout, prune)
+        self.backend: PrefillBackend = (
+            RecurrentPrefill(cfg, params_lm, self.layout, ecfg)
+            if self.is_streaming_family
+            else AttentionPrefill(cfg, params_lm, self.layout, ecfg)
+        )
+        self.decoder = GreedyDecoder(cfg, params_lm, ecfg)
+        self.cache_slots = self.layout.total_len + ecfg.max_new_tokens
+
+    # ------------------------------------------------------------------
+    def _query_embeds(self, S: int) -> jnp.ndarray:
+        ids = jnp.asarray(QUERY_IDS, jnp.int32)[None]
+        qe = tfm.embed_tokens(self.cfg, self.params, ids)
+        return jnp.broadcast_to(qe, (S,) + qe.shape[1:])
+
+    def batch_key(self, state: Optional[Dict[str, Any]]) -> tuple:
+        """Windows sharing a key may be fused into one batched call."""
+        if state is None or not self.reuse:
+            return ("fresh",)
+        if self.is_streaming_family:
+            return ("inc", state["offset"])
+        if not self.backend.batchable_step:
+            return ("inc", id(state))     # never batched (cacheblend)
+        return ("inc",)
+
+    # ------------------------------------------------------------------
+    def serve_batch(
+        self,
+        frames: jnp.ndarray,                  # (S, W, H, Wd)
+        metas: Sequence[CodecMetadata],
+        state: Optional[Dict[str, Any]],      # batched per-stream state
+    ) -> Tuple[List[WindowStats], Dict[str, Any]]:
+        """Serve one window of S same-layout, same-phase streams.
+
+        ``state`` is the batched session state from the previous window
+        (None for the first window of every stream in the batch); modes
+        without reuse treat every window as fresh.  Family differences
+        live entirely behind the ``PrefillBackend`` protocol.
+        """
+        lay = self.layout
+        S = frames.shape[0]
+        fresh = state is None or not self.reuse
+
+        # ---- ViT stage ------------------------------------------------
+        t0 = time.perf_counter()
+        if fresh:
+            rng = range(lay.window)
+        else:
+            rng = range(lay.window - lay.stride, lay.window)
+        vis, vval, patches = self.encoder.encode(frames, metas, rng)
+        qe = self._query_embeds(S)
+        t_vit = time.perf_counter() - t0
+
+        # ---- prefill stage --------------------------------------------
+        t0 = time.perf_counter()
+        if fresh:
+            pr = self.backend.fresh(vis, vval, qe)
+        else:
+            pr = self.backend.step(vis, vval, qe, state)
+        t_prefill = time.perf_counter() - t0 - pr.t_select
+
+        # ---- decode stage ---------------------------------------------
+        t0 = time.perf_counter()
+        answers, yes_no, caches, f_decode = self.decoder.decode(
+            pr.logits, pr.decode_caches, pr.decode_start, pr.flops_len
+        )
+        self.backend.absorb_decode(pr.state, caches)
+        t_decode = time.perf_counter() - t0
+
+        stats = [
+            WindowStats(
+                answer=int(answers[i]),
+                logits_yes_no=(float(yes_no[i, 0]), float(yes_no[i, 1])),
+                tokens_vis=pr.tokens_vis,
+                tokens_valid=int(pr.tokens_valid[i]),
+                tokens_refreshed=pr.n_refreshed,
+                vit_patches=int(patches[i]),
+                flops_vit=flopcount.vit_flops(self.v, int(patches[i])),
+                flops_prefill=pr.flops,
+                flops_decode=f_decode,
+                t_codec=0.0, t_vit=t_vit / S, t_prefill=t_prefill / S,
+                t_decode=t_decode / S, t_overhead=pr.t_select / S,
+            )
+            for i in range(S)
+        ]
+        return stats, pr.state

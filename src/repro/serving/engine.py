@@ -1,16 +1,10 @@
 """CodecFlow streaming-serving engine (paper Fig. 8) + baselines.
 
-Per-stream pipeline:
+``Engine`` is now a thin single-stream compatibility wrapper over the
+composable stage pipeline in ``repro.serving.api``:
 
-  Codec Processor (1)  ->  Motion Analyzer (2)  ->  Token Pruner (3)
-        |                       codec metadata            |
-        v                                                 v
-  single-pass decode                              pruned ViT encode
-                                                          |
-  KVC Reuser (4) + KVC Refresher (5)  <----  visual token embeddings
-        |
-        v
-  LLM prefill (full / selective)  ->  decode (answer generation)
+  CodecFrontend (1)  ->  VisualEncoder (2+3)  ->  PrefillBackend (4+5)
+                                                      -> GreedyDecoder
 
 Modes (paper §5 Baselines):
   * ``codecflow``     — pruning + selective KVC refresh (the system).
@@ -24,68 +18,33 @@ Modes (paper §5 Baselines):
 
 Families: attention archs use windowed Eq. 5 reuse; ssm/hybrid use
 boundary-state streaming (DESIGN.md §4).
+
+Multi-stream serving lives in ``repro.serving.scheduler.Scheduler``,
+which batches ready windows of concurrent sessions through the same
+stage pipeline (migration notes: docs/serving_api.md).
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Dict, List, Optional, Tuple
+from typing import List, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import CodecCfg, ModelCfg, ViTCfg
-from ..codec import StreamDecoder, encode_stream
-from ..codec.metadata import CodecMetadata, I_FRAME
-from ..core import (
-    WindowLayout, capacity_groups, full_decision, full_prefill, motion_mask,
-    reuse_caches, select_tokens, selective_refresh, shift_valid,
+from ..codec.metadata import CodecMetadata
+from ..configs.base import ModelCfg, ViTCfg
+from .api import (                              # re-exported for compat
+    EngineCfg, NO, PAD, BOS, QUERY_IDS, ServingPipeline, WindowStats, YES,
 )
-from ..core.kvc import shift_cache
-from ..models import transformer as tfm
-from ..models import vit as vitm
-from ..models import layers
-from . import flops as flopcount
 
-F32 = jnp.float32
-
-# token conventions for the anomaly-detection workload
-PAD, BOS, YES, NO = 0, 1, 2, 3
-QUERY_IDS = (5, 6, 7, 8, 9, 10, 11, 12)   # "describe ... abuse? yes/no"
-
-
-@dataclasses.dataclass(frozen=True)
-class EngineCfg:
-    mode: str = "codecflow"
-    codec: CodecCfg = CodecCfg()
-    max_new_tokens: int = 1
-    cacheblend_ratio: float = 0.15   # refresh budget for the baseline
-    vlcache_ratio: float = 0.15
-    q_chunk: int = 1024
-
-
-@dataclasses.dataclass
-class WindowStats:
-    answer: int
-    logits_yes_no: Tuple[float, float]
-    tokens_vis: int
-    tokens_valid: int
-    tokens_refreshed: int
-    vit_patches: int
-    flops_vit: float
-    flops_prefill: float
-    flops_decode: float
-    t_codec: float
-    t_vit: float
-    t_prefill: float
-    t_decode: float
-    t_overhead: float
+__all__ = [
+    "Engine", "EngineCfg", "WindowStats", "QUERY_IDS",
+    "PAD", "BOS", "YES", "NO",
+]
 
 
 class Engine:
-    """Single-stream serving engine (batch=1; vmap across streams is the
-    production path exercised by launch/serve.py)."""
+    """Single-stream serving engine: batch=1 view of the stage pipeline
+    (``Scheduler`` is the batched multi-stream production path)."""
 
     def __init__(
         self,
@@ -95,330 +54,47 @@ class Engine:
         params_vit,
         ecfg: EngineCfg,
     ):
-        assert cfg.vit is None or cfg.vit == vit_cfg
-        self.cfg = cfg
-        self.v = vit_cfg
-        self.params = params_lm
-        self.vparams = params_vit
-        self.ecfg = ecfg
-        c = ecfg.codec
-        prune = ecfg.mode in ("codecflow", "prune_only", "cacheblend", "vlcache")
-        kg = capacity_groups(vit_cfg, c.keep_ratio) if prune else vit_cfg.n_groups
-        self.layout = WindowLayout(
-            window=c.window_frames, stride=c.stride_frames, gop=c.gop,
-            g_tokens=vit_cfg.n_groups, k_tokens=kg,
-            query_len=len(QUERY_IDS),
-        )
-        self.prune = prune
-        self.reuse = ecfg.mode in ("codecflow", "refresh_only", "cacheblend", "vlcache")
-        self.is_streaming_family = cfg.family in ("ssm", "hybrid")
-        self.cache_slots = self.layout.total_len + ecfg.max_new_tokens
-        self._build_jit()
+        self._bind(ServingPipeline(cfg, vit_cfg, params_lm, params_vit, ecfg))
 
-    def _build_jit(self):
-        """Shape-static jitted fast paths (traced once per engine)."""
-        cfg, v, qc = self.cfg, self.v, self.ecfg.q_chunk
+    @classmethod
+    def from_pipeline(cls, pipeline: ServingPipeline) -> "Engine":
+        eng = cls.__new__(cls)
+        eng._bind(pipeline)
+        return eng
 
-        self._jit_prefill = jax.jit(
-            lambda params, tokens, caches, valid, embeds, off: tfm.prefill(
-                cfg, params, tokens, caches, valid=valid,
-                inputs_embeds=embeds, cache_offset=off, q_chunk=qc,
-            )
-        )
-        self._jit_decode = jax.jit(
-            lambda params, tok, caches, pos: tfm.decode_step(
-                cfg, params, tok, caches, pos
-            )
-        )
-        self._jit_vit_full = jax.jit(
-            lambda vp, frame: vitm.encode_full(vp, v, frame)
-        )
-        self._jit_vit_pruned = jax.jit(
-            lambda vp, frame, pidx, pval: vitm.encode_pruned_tokens(
-                vp, v, frame, pidx, pval
-            )
-        )
-        self._jit_reuse = jax.jit(
-            lambda caches: reuse_caches(cfg, caches, self.layout)
-        )
+    def _bind(self, pipeline: ServingPipeline) -> None:
+        self.pipeline = pipeline
+        # legacy attribute surface
+        self.cfg = pipeline.cfg
+        self.v = pipeline.v
+        self.params = pipeline.params
+        self.vparams = pipeline.vparams
+        self.ecfg = pipeline.ecfg
+        self.layout = pipeline.layout
+        self.prune = pipeline.prune
+        self.reuse = pipeline.reuse
+        self.is_streaming_family = pipeline.is_streaming_family
+        self.cache_slots = pipeline.cache_slots
 
     # ------------------------------------------------------------------
     def run_stream(self, frames: np.ndarray) -> List[WindowStats]:
         """Encode + serve every sliding window of a raw luma stream."""
-        t0 = time.perf_counter()
-        bs, meta = encode_stream(jnp.asarray(frames, F32), self.ecfg.codec)
-        dec = StreamDecoder(self.ecfg.codec)
-        dec.ingest(bs, meta)
-        t_codec_shared = time.perf_counter() - t0
-
+        fe = self.pipeline.frontend.open(np.asarray(frames))
         results = []
         state = None
-        for k in range(dec.n_windows()):
-            wframes, wmeta = dec.window(k)
-            stats, state = self.serve_window(
-                k, jnp.asarray(wframes), wmeta, state
-            )
-            stats.t_codec += t_codec_shared / max(dec.n_windows(), 1)
+        for k in range(fe.n_windows):
+            wframes, wmeta, t_codec = self.pipeline.frontend.window(fe, k)
+            stats, state = self.serve_window(k, wframes, wmeta, state)
+            stats.t_codec += t_codec
             results.append(stats)
         return results
-
-    # ------------------------------------------------------------------
-    def _frame_embeds(
-        self, frames: jnp.ndarray, meta: CodecMetadata, frame_range: range
-    ) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
-        """ViT-encode frames [range) of the window -> per-frame token
-        embeds packed per the layout.  Returns (embeds (1, n_tok, d),
-        valid (1, n_tok), patches_encoded).
-
-        Frames are BATCHED by coding type: all I-frames (full encode) in
-        one ViT call, all P-frames (pruned encode) in another — two jit
-        invocations per window instead of one per frame.
-        """
-        lay, v = self.layout, self.v
-        dynamic, score = motion_mask(meta, self.ecfg.codec, v.patches_per_side)
-        i_idx = [f for f in frame_range if lay.frame_is_i(f) or not self.prune]
-        p_idx = [f for f in frame_range if f not in i_idx]
-        n_patches = 0
-        toks_by_frame: dict = {}
-        val_by_frame: dict = {}
-
-        if i_idx:
-            batch = frames[jnp.asarray(i_idx)]             # (Ni, H, W)
-            toks = self._jit_vit_full(self.vparams, batch)  # (Ni, G, d)
-            for j, f in enumerate(i_idx):
-                n_tok = lay.frame_tokens[f]
-                toks_by_frame[f] = toks[j, :n_tok]
-                val_by_frame[f] = jnp.ones((n_tok,), bool)
-                n_patches += v.n_patches
-
-        if p_idx:
-            sel = jnp.asarray(p_idx)
-            dec = select_tokens(dynamic[sel], score[sel], v, lay.k_tokens)
-            toks_full = self._jit_vit_pruned(
-                self.vparams, frames[sel], dec.patch_idx, dec.patch_valid
-            )                                              # (Np, n_groups, d)
-            toks = jnp.take_along_axis(toks_full, dec.group_idx[..., None], 1)
-            n_patches += int(dec.patch_valid.sum())
-            for j, f in enumerate(p_idx):
-                n_tok = lay.frame_tokens[f]
-                toks_by_frame[f] = toks[j, :n_tok]
-                val_by_frame[f] = dec.group_valid[j, :n_tok]
-
-        embeds = jnp.concatenate([toks_by_frame[f] for f in frame_range], 0)
-        valids = jnp.concatenate([val_by_frame[f] for f in frame_range], 0)
-        return embeds[None], valids[None], n_patches
-
-    def _query_embeds(self) -> jnp.ndarray:
-        ids = jnp.asarray(QUERY_IDS, jnp.int32)[None]
-        return tfm.embed_tokens(self.cfg, self.params, ids)
 
     # ------------------------------------------------------------------
     def serve_window(
         self, k: int, frames: jnp.ndarray, meta: CodecMetadata, state
     ) -> Tuple[WindowStats, dict]:
-        lay = self.layout
-        mode = self.ecfg.mode
-
-        if self.is_streaming_family:
-            return self._serve_window_streaming(k, frames, meta, state)
-
-        # ---- ViT stage ------------------------------------------------
-        t0 = time.perf_counter()
-        fresh = k == 0 or not self.reuse
-        if fresh:
-            vis, vval, n_patches = self._frame_embeds(frames, meta, range(lay.window))
-        else:
-            new0 = lay.window - lay.stride
-            vis_new, vval_new, n_patches = self._frame_embeds(
-                frames, meta, range(new0, lay.window)
-            )
-            vis = jnp.concatenate(
-                [state["vis"][:, lay.shift_tokens:], vis_new], 1
-            )
-            vval = jnp.concatenate(
-                [state["vval"][:, lay.shift_tokens:], vval_new], 1
-            )
-        qe = self._query_embeds()
-        embeds = jnp.concatenate([vis, qe], 1)
-        valid = jnp.concatenate([vval, jnp.ones((1, lay.query_len), bool)], 1)
-        t_vit = time.perf_counter() - t0
-
-        # ---- LLM prefill stage -----------------------------------------
-        t0 = time.perf_counter()
-        alloc = self.cache_slots
-        n_refreshed = lay.total_len
-        f_prefill = flopcount.prefill_flops(self.cfg, lay.total_len, lay.total_len)
-        if fresh:
-            caches = tfm.init_caches(self.cfg, 1, alloc)
-            pad_valid = jnp.pad(valid, ((0, 0), (0, alloc - lay.total_len)))
-            logits, caches, _ = self._jit_prefill(
-                self.params, jnp.zeros((1, lay.total_len), jnp.int32),
-                caches, valid, embeds, 0,
-            )
-            kv_valid = pad_valid
-        else:
-            caches = self._jit_reuse(state["caches"])
-            prev_valid = state["kv_valid"]
-            kvv = jnp.zeros((1, alloc), bool)
-            kvv = kvv.at[:, : lay.overlap_tokens].set(
-                prev_valid[:, lay.shift_tokens: lay.vis_len]
-            )
-            ridx = self._refresh_indices(mode, state, embeds, caches)
-            remb = jnp.take_along_axis(
-                embeds, jnp.asarray(ridx)[None, :, None], axis=1
-            )
-            rval = jnp.take_along_axis(valid, jnp.asarray(ridx)[None], axis=1)
-            logits, caches, _ = self._selective(
-                caches, remb, rval, kvv, ridx
-            )
-            kv_valid = kvv.at[:, jnp.asarray(ridx)].set(rval)
-            n_refreshed = len(ridx)
-            f_prefill = flopcount.prefill_flops(
-                self.cfg, n_refreshed, lay.total_len
-            )
-        t_prefill = time.perf_counter() - t0
-
-        # ---- decode stage ----------------------------------------------
-        t0 = time.perf_counter()
-        yes_no = (float(logits[0, YES]), float(logits[0, NO]))
-        answer = int(logits[0, YES] > logits[0, NO])
-        tok = jnp.asarray([[YES if answer else NO]], jnp.int32)
-        f_decode = 0.0
-        for i in range(self.ecfg.max_new_tokens):
-            pos = lay.total_len + i
-            kv_valid = kv_valid.at[:, pos].set(True)
-            logits_d, caches = self._jit_decode(self.params, tok, caches, pos)
-            tok = jnp.argmax(logits_d, -1)[:, None].astype(jnp.int32)
-            f_decode += flopcount.decode_flops(self.cfg, lay.total_len + i + 1)
-        t_decode = time.perf_counter() - t0
-
-        stats = WindowStats(
-            answer=answer,
-            logits_yes_no=yes_no,
-            tokens_vis=lay.vis_len,
-            tokens_valid=int(valid.sum()),
-            tokens_refreshed=n_refreshed,
-            vit_patches=n_patches,
-            flops_vit=flopcount.vit_flops(self.v, n_patches),
-            flops_prefill=f_prefill,
-            flops_decode=f_decode,
-            t_codec=0.0, t_vit=t_vit, t_prefill=t_prefill,
-            t_decode=t_decode, t_overhead=0.0,
+        """Serve one window (batch=1 path through the stage pipeline)."""
+        stats, new_state = self.pipeline.serve_batch(
+            jnp.asarray(frames)[None], [meta], state
         )
-        new_state = {
-            "vis": vis, "vval": vval, "caches": caches, "kv_valid": kv_valid,
-        }
-        return stats, new_state
-
-    # ------------------------------------------------------------------
-    def _selective(self, caches, remb, rval, kvv, ridx):
-        if not hasattr(self, "_jit_selective"):
-            cfg, lay, qc = self.cfg, self.layout, self.ecfg.q_chunk
-
-            def impl(params, caches, remb, rval, kvv, idx):
-                B = remb.shape[0]
-                positions = jnp.broadcast_to(idx[None], (B, idx.shape[0]))
-                kv_full = kvv.at[:, idx].set(rval)
-                h = remb.astype(params["embed"].dtype)
-                h, new_caches, _ = tfm.run_stack(
-                    cfg, params, h, positions, None, caches,
-                    cache_offset=None, cache_len=lay.total_len,
-                    scatter_idx=idx, kv_valid=kv_full, q_chunk=qc,
-                )
-                hn = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
-                logits = tfm.lm_logits(cfg, params, hn[:, -1])
-                return logits, new_caches, h
-
-            self._jit_selective = jax.jit(impl)
-        return self._jit_selective(
-            self.params, caches, remb, rval, kvv, jnp.asarray(ridx)
-        )
-
-    def _refresh_indices(self, mode, state, embeds, reused_caches) -> np.ndarray:
-        """Which token positions get recomputed (the *when/where* of C2)."""
-        lay = self.layout
-        if mode in ("codecflow", "refresh_only"):
-            return lay.refresh_token_idx
-        tail = np.arange(lay.overlap_tokens, lay.total_len, dtype=np.int32)
-        budget = len(lay.anchor_token_idx)
-        if mode == "vlcache":
-            r = max(1, int(self.ecfg.vlcache_ratio * lay.overlap_tokens))
-            sel = np.linspace(0, lay.overlap_tokens - 1, min(r, budget) or 1).astype(np.int32)
-            return np.unique(np.concatenate([sel, tail]))
-        if mode == "cacheblend":
-            # online probe: layer-0 K deviation between the corrected
-            # reused keys and keys recomputed from current embeddings.
-            p0 = jax.tree_util.tree_map(lambda x: x[0], self.params["blocks"][0])
-            hn = layers.rmsnorm(p0["ln1"], embeds[:, : lay.overlap_tokens], self.cfg.norm_eps)
-            kq = (hn @ p0["mixer"]["wk"]).reshape(
-                1, lay.overlap_tokens, self.cfg.n_kv, self.cfg.d_head
-            )
-            from ..kernels.ref import apply_rope_ref
-            pos = jnp.arange(lay.overlap_tokens)[None]
-            k_new = apply_rope_ref(kq, pos, self.cfg.rope_theta)
-            k_reused = reused_caches.blocks[0].k[0][:, : lay.overlap_tokens]
-            dev = jnp.linalg.norm(
-                (k_new - k_reused.astype(k_new.dtype)).astype(F32), axis=(-1, -2)
-            )[0]
-            top = np.asarray(jnp.argsort(-dev)[:budget], np.int32)
-            return np.unique(np.concatenate([top, tail]))
-        raise ValueError(mode)
-
-    # ------------------------------------------------------------------
-    def _serve_window_streaming(self, k, frames, meta, state):
-        """SSM / hybrid boundary-state streaming (DESIGN.md §4)."""
-        lay = self.layout
-        t0 = time.perf_counter()
-        if k == 0 or not self.reuse:
-            rng = range(lay.window)
-        else:
-            rng = range(lay.window - lay.stride, lay.window)
-        vis, vval, n_patches = self._frame_embeds(frames, meta, rng)
-        qe = self._query_embeds()
-        t_vit = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        max_hist = state["max_hist"] if state else 4 * lay.vis_len + lay.query_len + self.ecfg.max_new_tokens
-        if k == 0 or not self.reuse:
-            caches = tfm.init_caches(self.cfg, 1, max_hist)
-            offset = 0
-        else:
-            caches = state["caches"]
-            offset = state["offset"]
-        n_new = vis.shape[1]
-        _, caches, _ = self._jit_prefill(
-            self.params, jnp.zeros((1, n_new), jnp.int32), caches,
-            vval, vis, offset,
-        )
-        offset_vis = offset + n_new
-        # fork: query + decode do not pollute the stream state
-        q_logits, q_caches, _ = self._jit_prefill(
-            self.params, jnp.zeros((1, lay.query_len), jnp.int32), caches,
-            jnp.ones((1, lay.query_len), bool), qe, offset_vis,
-        )
-        f_prefill = flopcount.prefill_flops(self.cfg, n_new + lay.query_len, offset_vis + lay.query_len)
-        t_prefill = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        answer = int(q_logits[0, YES] > q_logits[0, NO])
-        yes_no = (float(q_logits[0, YES]), float(q_logits[0, NO]))
-        tok = jnp.asarray([[YES if answer else NO]], jnp.int32)
-        f_decode = 0.0
-        for i in range(self.ecfg.max_new_tokens):
-            logits_d, q_caches = self._jit_decode(
-                self.params, tok, q_caches, offset_vis + lay.query_len + i
-            )
-            tok = jnp.argmax(logits_d, -1)[:, None].astype(jnp.int32)
-            f_decode += flopcount.decode_flops(self.cfg, offset_vis + lay.query_len + i)
-        t_decode = time.perf_counter() - t0
-
-        stats = WindowStats(
-            answer=answer, logits_yes_no=yes_no,
-            tokens_vis=n_new, tokens_valid=int(vval.sum()),
-            tokens_refreshed=n_new + lay.query_len, vit_patches=n_patches,
-            flops_vit=flopcount.vit_flops(self.v, n_patches),
-            flops_prefill=f_prefill, flops_decode=f_decode,
-            t_codec=0.0, t_vit=t_vit, t_prefill=t_prefill,
-            t_decode=t_decode, t_overhead=0.0,
-        )
-        return stats, {"caches": caches, "offset": offset_vis, "max_hist": max_hist}
+        return stats[0], new_state

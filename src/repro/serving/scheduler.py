@@ -1,0 +1,225 @@
+"""Batched multi-stream scheduler over the stage pipeline.
+
+Admission + batching policy:
+
+  * ``submit`` performs codec ingest (stage 1) and queues the session;
+    up to ``max_concurrent`` sessions are *admitted* (hold KV state) at
+    a time — finished sessions free their slot for queued ones.
+  * Each ``poll`` picks the largest group of admitted sessions whose
+    next window shares a batch key (same layout + same phase: fresh vs
+    incremental; recurrent families additionally require an equal
+    boundary-state offset) and serves all of them through ONE batched
+    ViT-encode + prefill + decode, instead of N sequential batch=1
+    calls.
+  * Per-stream KV states are concatenated along the batch axis before
+    the call and split back after; that (de)staging cost is measured
+    and reported as ``WindowStats.t_overhead``.
+
+Streams of equal length admitted together stay in lockstep, so the
+jitted stage functions trace once per (batch size, phase) pair.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .api import ServingPipeline, StreamRequest, StreamSession, WindowResult
+
+
+# ----------------------------------------------------------------------
+# batched-state (de)staging
+# ----------------------------------------------------------------------
+def _concat_states(states: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Stack per-session (batch=1) KV states into one batched state.
+
+    ``caches`` pytrees carry batch on axis 1 (leading axis is the layer
+    repeat), plain arrays on axis 0; python scalars (e.g. the recurrent
+    ``offset``) must agree across the group.
+    """
+    out: Dict[str, Any] = {}
+    for key in states[0]:
+        vals = [s[key] for s in states]
+        if key == "caches":
+            out[key] = jax.tree_util.tree_map(
+                lambda *xs: jnp.concatenate(xs, axis=1), *vals
+            )
+        elif isinstance(vals[0], (int, float)):
+            assert all(v == vals[0] for v in vals), (key, vals)
+            out[key] = vals[0]
+        else:
+            out[key] = jnp.concatenate(vals, axis=0)
+    return out
+
+
+def _split_state(state: Dict[str, Any], n: int) -> List[Dict[str, Any]]:
+    """Inverse of ``_concat_states``: n per-session batch=1 states."""
+    outs: List[Dict[str, Any]] = [dict() for _ in range(n)]
+    for key, val in state.items():
+        if key == "caches":
+            for i in range(n):
+                outs[i][key] = jax.tree_util.tree_map(
+                    lambda x: x[:, i: i + 1], val
+                )
+        elif isinstance(val, (int, float)):
+            for i in range(n):
+                outs[i][key] = val
+        else:
+            for i in range(n):
+                outs[i][key] = val[i: i + 1]
+    return outs
+
+
+# ----------------------------------------------------------------------
+class Scheduler:
+    """Admits N concurrent ``StreamSession``s and serves ready windows
+    of same-layout streams in batched stage calls.
+
+    Usage::
+
+        sched = Scheduler(pipeline, max_concurrent=8)
+        sid = sched.submit(StreamRequest("cam-0", frames))
+        while not sched.idle:
+            for res in sched.poll():
+                ...                       # WindowResult per window
+        results = sched.close(sid)        # release KV state
+    """
+
+    def __init__(self, pipeline: ServingPipeline, *,
+                 max_concurrent: int = 8, max_batch: Optional[int] = None):
+        assert max_concurrent >= 1
+        self.pipeline = pipeline
+        self.max_concurrent = max_concurrent
+        self.max_batch = max_batch or max_concurrent
+        self._queue: deque[StreamSession] = deque()
+        self._active: Dict[int, StreamSession] = {}
+        self._sessions: Dict[int, StreamSession] = {}
+        self._next_sid = 0
+        self.windows_served = 0
+        self.t_serve = 0.0               # wall time inside poll()
+
+    # -- session lifecycle ---------------------------------------------
+    def submit(self, request: StreamRequest) -> int:
+        """Open a session (codec ingest) and queue it for admission."""
+        stream = self.pipeline.frontend.open(request.frames)
+        sess = StreamSession(self._next_sid, request, stream)
+        self._next_sid += 1
+        self._sessions[sess.sid] = sess
+        self._queue.append(sess)
+        return sess.sid
+
+    def session(self, sid: int) -> StreamSession:
+        return self._sessions[sid]
+
+    def close(self, sid: int) -> List[WindowResult]:
+        """Release the session's KV state; returns its window results."""
+        sess = self._sessions.pop(sid)
+        self._active.pop(sid, None)
+        try:
+            self._queue.remove(sess)
+        except ValueError:
+            pass
+        sess.state = None
+        return sess.results
+
+    @property
+    def idle(self) -> bool:
+        return not self._queue and all(s.done for s in self._active.values())
+
+    # -- scheduling ----------------------------------------------------
+    def _admit(self) -> None:
+        for sid in [s for s, sess in self._active.items() if sess.done]:
+            del self._active[sid]
+        while self._queue and len(self._active) < self.max_concurrent:
+            sess = self._queue.popleft()
+            if not sess.done:            # zero-window streams finish here
+                self._active[sess.sid] = sess
+
+    def _ready_groups(self) -> List[List[StreamSession]]:
+        groups: Dict[tuple, List[StreamSession]] = {}
+        for sess in self._active.values():
+            if sess.done:
+                continue
+            key = self.pipeline.batch_key(sess.state)
+            groups.setdefault(key, []).append(sess)
+        return list(groups.values())
+
+    def poll(self) -> List[WindowResult]:
+        """Serve ONE batched window group; [] when nothing is ready."""
+        self._admit()
+        groups = self._ready_groups()
+        if not groups:
+            return []
+        group = max(groups, key=len)[: self.max_batch]
+        t_poll0 = time.perf_counter()
+
+        # stage 1: window slices (+ amortized codec time)
+        frames_l, metas, t_codecs = [], [], []
+        for sess in group:
+            wf, wm, tc = self.pipeline.frontend.window(
+                sess.stream, sess.next_window
+            )
+            frames_l.append(wf)
+            metas.append(wm)
+            t_codecs.append(tc)
+        frames = jnp.stack(frames_l, 0)
+
+        # batched-state staging (measured scheduler overhead); singleton
+        # groups bypass it — the batch=1 path stays copy-free like the
+        # legacy Engine
+        fresh = group[0].state is None or not self.pipeline.reuse
+        t0 = time.perf_counter()
+        if fresh:
+            state = None
+        elif len(group) == 1:
+            state = group[0].state
+        else:
+            state = _concat_states([s.state for s in group])
+        t_stage = time.perf_counter() - t0
+
+        stats, new_state = self.pipeline.serve_batch(frames, metas, state)
+
+        t0 = time.perf_counter()
+        if not self.pipeline.reuse:
+            # non-reuse modes never consume state: skip the split and
+            # don't pin dead cache pytrees on the sessions
+            per_states = [None] * len(group)
+        elif len(group) == 1:
+            per_states = [new_state]
+        else:
+            per_states = _split_state(new_state, len(group))
+        t_stage += time.perf_counter() - t0
+
+        results = []
+        for i, sess in enumerate(group):
+            st = stats[i]
+            st.t_codec += t_codecs[i]
+            st.t_overhead += t_stage / len(group)
+            res = WindowResult(sess.request.stream_id, sess.sid,
+                               sess.next_window, st)
+            sess.results.append(res)
+            sess.next_window += 1
+            # completed sessions keep results but release their KV state
+            # immediately — KV-cache memory scales with max_concurrent,
+            # not with the total number of submitted streams (decoded
+            # frame buffers, by contrast, live from submit-time ingest)
+            sess.state = None if sess.done else per_states[i]
+            results.append(res)
+        self.windows_served += len(results)
+        self.t_serve += time.perf_counter() - t_poll0
+        return results
+
+    def run(self) -> Dict[int, List[WindowResult]]:
+        """Drain every open session; per-session window results.
+
+        Sessions already ``close``d are not included — ``close`` returned
+        their results."""
+        while True:
+            if not self.poll():
+                self._admit()
+                if self.idle:
+                    break
+        return {sid: sess.results for sid, sess in self._sessions.items()}

@@ -1,0 +1,38 @@
+"""Optional-dependency shim for ``hypothesis`` (dev extra, see
+requirements-dev.txt).
+
+When hypothesis is installed the real ``given``/``settings``/``st`` are
+re-exported and property tests run as usual.  When it is missing, the
+stubs keep the module importable at collection time and each
+``@given``-decorated test calls ``pytest.importorskip("hypothesis")`` at
+run time, so only the property tests are skipped — plain tests in the
+same module still run.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without the extra
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(_fn):
+            def skipped(*a, **k):
+                pytest.importorskip("hypothesis")
+            skipped.__name__ = _fn.__name__
+            skipped.__doc__ = _fn.__doc__
+            return skipped
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _Strategies:
+        """Placeholder strategy factory: builds inert strategy args so
+        ``@given(st.integers(...))`` evaluates at collection time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

@@ -3,7 +3,7 @@ window serving."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional dev dep
 
 from repro.codec import (
     NaiveDecoder, StreamDecoder, decode_stream, encode_stream, estimate_bits,

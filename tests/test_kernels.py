@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional dev dep
 
 from repro.kernels import ref
 from repro.kernels.flash_prefill import flash_prefill_pallas

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional dev dep
 
 from repro.codec import encode_stream
 from repro.configs.base import CodecCfg, ViTCfg

@@ -10,6 +10,8 @@ from repro.models import transformer as tfm
 from repro.training.optimizer import OptCfg, init_opt_state
 from repro.training.train_step import Batch, make_train_step
 
+pytestmark = pytest.mark.slow  # full per-arch sweep; minutes on CPU
+
 
 @pytest.mark.parametrize("arch", ASSIGNED)
 def test_smoke_forward_and_train_step(arch):

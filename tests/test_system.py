@@ -18,6 +18,8 @@ from repro.models import vit as vitm
 from repro.models.init import ParamBuilder, split_tree
 from repro.serving import Engine, EngineCfg, agreement, video_prediction
 
+pytestmark = pytest.mark.slow  # full pipeline across variants; ~1 min on CPU
+
 CODEC = CodecCfg(gop=4, block=16, search_radius=4, window_frames=8,
                  stride_frames=4, keep_ratio=0.5)
 LM = ModelCfg(name="sys-vlm", family="vlm", n_layers=2, d_model=64,
