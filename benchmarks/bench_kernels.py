@@ -1,15 +1,28 @@
 """Kernel microbenchmarks: us/call of each compute hot-spot's oracle on
 CPU (the Pallas kernels execute only on TPU; interpret mode measures
-Python, not hardware — so the jit'd jnp oracle is what we time here)."""
+Python, not hardware — so the jit'd jnp oracle is what we time here).
+
+The refresh-attention section additionally reports the *static* FLOP
+accounting of the block-sparse kernel path: the ``WindowLayout``-derived
+tile map says exactly which (q-tile, kv-tile) pairs a TPU would visit,
+so the dense-vs-sparse FLOP ratio is exact and hardware-independent.
+
+Set ``BENCH_SMOKE=1`` to append a tiny end-to-end serving probe
+(windows/s, codecflow vs fullcomp) — the config CI's bench-smoke job
+runs to put a throughput number next to the kernel rows.
+"""
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import WindowLayout, refresh_block_map
 from repro.kernels import ref
-from repro.kernels.ops import mv_sad, rope_shift, ssd_scan
+from repro.kernels.ops import flash_refresh, mv_sad, rope_shift, ssd_scan
+from repro.models import layers
 
 from .common import csv_row
 
@@ -56,4 +69,122 @@ def run(emit) -> dict:
     us = _timeit(lambda: f(q, kv, kv))
     out["attention"] = us
     emit(csv_row("kernels/causal_attn_1k_gqa", us, "prefill attention"))
+
+    out.update(_refresh_attention(emit))
+    if os.environ.get("BENCH_SMOKE"):
+        out.update(_serve_smoke(emit))
+    return out
+
+
+def _refresh_attention(emit) -> dict:
+    """Selective-refresh attention (§3.4.1): old dense-mask path vs the
+    flash_refresh dispatch, plus the exact block-sparse FLOP ledger."""
+    H, Hkv, D = 8, 2, 64
+    lay = WindowLayout(window=16, stride=4, gop=4, g_tokens=256,
+                       k_tokens=128, query_len=32)
+    bm = refresh_block_map(lay)
+    nr, S = lay.n_refresh, lay.total_len
+
+    k = jax.random.PRNGKey(1)
+    ks = jax.random.split(k, 4)
+    q = jax.random.normal(ks[0], (1, nr, H, D), jnp.bfloat16)
+    kk = jax.random.normal(ks[1], (1, S, Hkv, D), jnp.bfloat16)
+    vv = jax.random.normal(ks[2], (1, S, Hkv, D), jnp.bfloat16)
+    kv_valid = jax.random.uniform(ks[3], (1, S)) > 0.3
+    qpos = jnp.asarray(lay.refresh_token_idx)[None]
+
+    f_dense = jax.jit(
+        lambda a, b, c, p, m: layers.mha(a, b, c, p,
+                                         jnp.arange(S)[None], m)
+    )
+    us_dense = _timeit(lambda: f_dense(q, kk, vv, qpos, kv_valid))
+    f_new = jax.jit(
+        lambda a, b, c, p, m: flash_refresh(a, b, c, p, m, block_map=bm)
+    )
+    us_new = _timeit(lambda: f_new(q, kk, vv, qpos, kv_valid))
+
+    # per-tile cost: qk^T + pv, each 2*tq*tk*D MACs, over all q heads
+    tile_flops = 4 * bm.tq * bm.tk * D * H
+    dense_tiles = bm.n_q_tiles * bm.n_kv_tiles
+    visited = int(bm.tile_count.sum())
+    flops_dense = dense_tiles * tile_flops
+    flops_sparse = visited * tile_flops
+    emit(csv_row(
+        "kernels/refresh_attn_dense_mask", us_dense,
+        f"old path: (B,S) mask, n_refresh={nr} S={S}"))
+    emit(csv_row(
+        "kernels/refresh_attn_dispatch", us_new,
+        f"ops.flash_refresh oracle (CPU); kernel path skips "
+        f"{dense_tiles - visited}/{dense_tiles} tiles"))
+    emit(csv_row(
+        "kernels/refresh_attn_block_flops", 0.0,
+        f"dense={flops_dense / 1e6:.1f}MF sparse={flops_sparse / 1e6:.1f}MF "
+        f"({100 * (1 - bm.density):.0f}% skipped)"))
+    return {
+        "refresh_dense_us": us_dense,
+        "refresh_dispatch_us": us_new,
+        "refresh_n_q": nr,
+        "refresh_kv_len": S,
+        "refresh_block_density": bm.density,
+        "refresh_tiles_total": dense_tiles,
+        "refresh_tiles_visited": visited,
+        "refresh_flops_dense": float(flops_dense),
+        "refresh_flops_sparse": float(flops_sparse),
+    }
+
+
+def _serve_smoke(emit) -> dict:
+    """Tiny end-to-end throughput probe (CI smoke config): 2 short
+    streams through the refresh path and the full-recompute baseline.
+
+    Uses randomly-initialized weights — windows/s and the refresh-token
+    accounting are properties of the serving system, not of the model
+    quality, and skipping the tiny-VLM training keeps this CI-fast.
+    """
+    import numpy as np
+
+    from repro.models import transformer as tfm
+    from repro.models import vit as vitm
+    from repro.models.init import ParamBuilder, split_tree
+    from repro.serving import (
+        EngineCfg, Scheduler, ServingPipeline, StreamRequest,
+    )
+
+    from .common import CODEC, LM, VIT
+
+    params, _ = tfm.init_params(LM, jax.random.PRNGKey(0))
+    pb = ParamBuilder(jax.random.PRNGKey(1))
+    vparams = split_tree(vitm.init_vit(pb, VIT, LM.d_model))[0]
+    rng = np.random.default_rng(0)
+    videos = [
+        (rng.random((24, VIT.image, VIT.image)) * 255).astype(np.float32)
+        for _ in range(2)
+    ]
+
+    out = {}
+    for mode in ("codecflow", "fullcomp"):
+        pipe = ServingPipeline(LM, VIT, params, vparams,
+                               EngineCfg(mode=mode, codec=CODEC))
+        # warmup traces the fresh + incremental jitted paths
+        warm = Scheduler(pipe, max_concurrent=2)
+        for i, frames in enumerate(videos):
+            warm.submit(StreamRequest(i, frames))
+        warm.run()
+        sched = Scheduler(pipe, max_concurrent=2)
+        t0 = time.perf_counter()
+        sids = [sched.submit(StreamRequest(i, frames))
+                for i, frames in enumerate(videos)]
+        per_session = sched.run()
+        wall = time.perf_counter() - t0
+        stats = [res.stats for sid in sids for res in per_session[sid]]
+        n_windows = len(stats)
+        wps = n_windows / max(wall, 1e-9)
+        refreshed = sum(s.tokens_refreshed for s in stats) / max(n_windows, 1)
+        out[f"smoke_{mode}_windows_per_s"] = wps
+        out[f"smoke_{mode}_refreshed_per_window"] = refreshed
+        out[f"smoke_{mode}_flops_prefill"] = sum(
+            s.flops_prefill for s in stats)
+        emit(csv_row(
+            f"kernels/smoke_{mode}", 1e6 / max(wps, 1e-9),
+            f"windows/s={wps:.2f} refresh/win={refreshed:.0f}"))
     return out

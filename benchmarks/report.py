@@ -1,16 +1,18 @@
-"""Render experiments/bench_results.json as the EXPERIMENTS.md
-§Reproduction table (paper claim vs measured).
+"""Render benchmark JSON as markdown tables.
 
-    PYTHONPATH=src python -m benchmarks.report
+    PYTHONPATH=src python -m benchmarks.report [bench.json]
+        EXPERIMENTS.md §Reproduction table (paper claim vs measured).
+
+    PYTHONPATH=src python -m benchmarks.report --ci-summary [bench.json]
+        Compact kernel/serving table for $GITHUB_STEP_SUMMARY: windows/s
+        from the serve smoke probe plus the refresh-attention FLOPs
+        ledger of the block-sparse kernel path.
 """
 import json
 import sys
 
-PATH = sys.argv[1] if len(sys.argv) > 1 else "experiments/bench_results.json"
-r = json.load(open(PATH))
 
-
-def g(*keys, default="—"):
+def _get(r, *keys, default="—"):
     cur = r
     for k in keys:
         if not isinstance(cur, dict) or k not in cur:
@@ -19,57 +21,115 @@ def g(*keys, default="—"):
     return cur
 
 
-rows = [
-    ("E2E speedup (Fig. 11)", "up to 2.97x (InternVL3)",
-     f"wall {g('latency','codecflow','speedup_vs_fullcomp'):.2f}x / "
-     f"FLOP-bound {g('latency','codecflow','speedup_flop_bound'):.2f}x"
-     if isinstance(g('latency','codecflow','speedup_vs_fullcomp'), float) else "—"),
-    ("Transmission reduction (Fig. 11)", "2.12x",
-     f"{g('latency','transmission','reduction_x'):.2f}x vs all-intra"
-     if isinstance(g('latency','transmission','reduction_x'), float) else "—"),
-    ("F1 drop (Fig. 12)", "0 ~ 0.08",
-     f"{g('accuracy','f1_drop_codecflow'):+.3f}"
-     if isinstance(g('accuracy','f1_drop_codecflow'), float) else "—"),
-    ("Token reduction (Fig. 13a)", "~85% vs Full-Comp",
-     f"{g('resources','codecflow','token_reduction')*100:.0f}%"
-     if isinstance(g('resources','codecflow','token_reduction'), float) else "—"),
-    ("FLOP reduction (Fig. 13b)", "~87%",
-     f"{g('resources','codecflow','flop_reduction')*100:.0f}%"
-     if isinstance(g('resources','codecflow','flop_reduction'), float) else "—"),
-    ("Pruning falls with motion (Fig. 14)", "50/27/13% low/med/high",
-     f"{g('motion','low','pruned_frac')*100:.0f}/"
-     f"{g('motion','medium','pruned_frac')*100:.0f}/"
-     f"{g('motion','high','pruned_frac')*100:.0f}% "
-     f"(monotone={g('motion','pruning_monotone')})"
-     if isinstance(g('motion','low','pruned_frac'), float) else "—"),
-    ("Combined ablation saves most (Fig. 15)", "3.87x combined",
-     f"combined_saves_most={g('ablation','combined_saves_most')}, "
-     f"flops -{g('ablation','codecflow','flop_reduction')*100:.0f}% vs "
-     f"prune-only -{g('ablation','prune_only','flop_reduction')*100:.0f}% / "
-     f"refresh-only -{g('ablation','refresh_only','flop_reduction')*100:.0f}%"
-     if isinstance(g('ablation','codecflow','flop_reduction'), float) else "—"),
-    ("Smaller stride -> better F1 (Fig. 16)", "F1 0.84->0.89 at 20%",
-     " / ".join(f"s{k}: F1={v['f1']:.2f}"
-                for k, v in sorted(g('sensitivity','stride',
-                                     default={}).items(),
-                                   key=lambda kv: int(kv[0])))
-     or "—"),
-    ("Higher tau -> fewer tokens, lower F1 (Fig. 17)", "F1 0.81->0.73",
-     " / ".join(f"tau{k}: F1={v['f1']:.2f},tok={v['tokens']:.0f}"
-                for k, v in sorted(g('sensitivity','mv', default={}).items(),
-                                   key=lambda kv: float(kv[0])))
-     or "—"),
-    ("Larger GOP -> fewer refreshes (Fig. 18)", "F1 .77/.79/.81, latency falls",
-     " / ".join(f"g{k}: F1={v['f1']:.2f},refresh={v['refreshed']:.0f}"
-                for k, v in sorted(g('sensitivity','gop', default={}).items(),
-                                   key=lambda kv: int(kv[0])))
-     or "—"),
-    ("Decision overhead (Fig. 19)", "~4% of latency",
-     f"{g('overhead','share_of_window')*100:.1f}%"
-     if isinstance(g('overhead','share_of_window'), float) else "—"),
-]
+def reproduction_table(r) -> str:
+    def g(*keys, default="—"):
+        return _get(r, *keys, default=default)
 
-print("| claim | paper | this repo |")
-print("|---|---|---|")
-for name, paper, ours in rows:
-    print(f"| {name} | {paper} | {ours} |")
+    rows = [
+        ("E2E speedup (Fig. 11)", "up to 2.97x (InternVL3)",
+         f"wall {g('latency','codecflow','speedup_vs_fullcomp'):.2f}x / "
+         f"FLOP-bound {g('latency','codecflow','speedup_flop_bound'):.2f}x"
+         if isinstance(g('latency','codecflow','speedup_vs_fullcomp'), float) else "—"),
+        ("Transmission reduction (Fig. 11)", "2.12x",
+         f"{g('latency','transmission','reduction_x'):.2f}x vs all-intra"
+         if isinstance(g('latency','transmission','reduction_x'), float) else "—"),
+        ("F1 drop (Fig. 12)", "0 ~ 0.08",
+         f"{g('accuracy','f1_drop_codecflow'):+.3f}"
+         if isinstance(g('accuracy','f1_drop_codecflow'), float) else "—"),
+        ("Token reduction (Fig. 13a)", "~85% vs Full-Comp",
+         f"{g('resources','codecflow','token_reduction')*100:.0f}%"
+         if isinstance(g('resources','codecflow','token_reduction'), float) else "—"),
+        ("FLOP reduction (Fig. 13b)", "~87%",
+         f"{g('resources','codecflow','flop_reduction')*100:.0f}%"
+         if isinstance(g('resources','codecflow','flop_reduction'), float) else "—"),
+        ("Pruning falls with motion (Fig. 14)", "50/27/13% low/med/high",
+         f"{g('motion','low','pruned_frac')*100:.0f}/"
+         f"{g('motion','medium','pruned_frac')*100:.0f}/"
+         f"{g('motion','high','pruned_frac')*100:.0f}% "
+         f"(monotone={g('motion','pruning_monotone')})"
+         if isinstance(g('motion','low','pruned_frac'), float) else "—"),
+        ("Combined ablation saves most (Fig. 15)", "3.87x combined",
+         f"combined_saves_most={g('ablation','combined_saves_most')}, "
+         f"flops -{g('ablation','codecflow','flop_reduction')*100:.0f}% vs "
+         f"prune-only -{g('ablation','prune_only','flop_reduction')*100:.0f}% / "
+         f"refresh-only -{g('ablation','refresh_only','flop_reduction')*100:.0f}%"
+         if isinstance(g('ablation','codecflow','flop_reduction'), float) else "—"),
+        ("Smaller stride -> better F1 (Fig. 16)", "F1 0.84->0.89 at 20%",
+         " / ".join(f"s{k}: F1={v['f1']:.2f}"
+                    for k, v in sorted(g('sensitivity','stride',
+                                         default={}).items(),
+                                       key=lambda kv: int(kv[0])))
+         or "—"),
+        ("Higher tau -> fewer tokens, lower F1 (Fig. 17)", "F1 0.81->0.73",
+         " / ".join(f"tau{k}: F1={v['f1']:.2f},tok={v['tokens']:.0f}"
+                    for k, v in sorted(g('sensitivity','mv', default={}).items(),
+                                       key=lambda kv: float(kv[0])))
+         or "—"),
+        ("Larger GOP -> fewer refreshes (Fig. 18)", "F1 .77/.79/.81, latency falls",
+         " / ".join(f"g{k}: F1={v['f1']:.2f},refresh={v['refreshed']:.0f}"
+                    for k, v in sorted(g('sensitivity','gop', default={}).items(),
+                                       key=lambda kv: int(kv[0])))
+         or "—"),
+        ("Decision overhead (Fig. 19)", "~4% of latency",
+         f"{g('overhead','share_of_window')*100:.1f}%"
+         if isinstance(g('overhead','share_of_window'), float) else "—"),
+    ]
+    out = ["| claim | paper | this repo |", "|---|---|---|"]
+    out += [f"| {name} | {paper} | {ours} |" for name, paper, ours in rows]
+    return "\n".join(out)
+
+
+def ci_summary(r) -> str:
+    """Kernel CI step summary: throughput + refresh-attention FLOPs."""
+    k = r.get("kernels", {})
+    out = ["## Kernel bench smoke", ""]
+    out += ["| metric | value |", "|---|---|"]
+    for label, key, fmt in [
+        ("mv_sad oracle", "mv_sad", "{:.0f} us"),
+        ("rope_shift oracle", "rope_shift", "{:.0f} us"),
+        ("ssd_scan oracle", "ssd_scan", "{:.0f} us"),
+        ("prefill attention oracle", "attention", "{:.0f} us"),
+        ("refresh attn, dense-mask path", "refresh_dense_us", "{:.0f} us"),
+        ("refresh attn, flash_refresh dispatch", "refresh_dispatch_us",
+         "{:.0f} us"),
+        ("codecflow windows/s (smoke)", "smoke_codecflow_windows_per_s",
+         "{:.2f}"),
+        ("fullcomp windows/s (smoke)", "smoke_fullcomp_windows_per_s",
+         "{:.2f}"),
+    ]:
+        v = k.get(key)
+        out.append(f"| {label} | {fmt.format(v) if v is not None else '—'} |")
+    out += ["", "### Refresh-attention block sparsity", ""]
+    out += ["| | dense | block-sparse |", "|---|---|---|"]
+    tiles_t, tiles_v = k.get("refresh_tiles_total"), k.get("refresh_tiles_visited")
+    fd, fs = k.get("refresh_flops_dense"), k.get("refresh_flops_sparse")
+    if None not in (tiles_t, tiles_v, fd, fs):
+        out.append(f"| (q, kv) tiles | {tiles_t} | {tiles_v} |")
+        out.append(f"| attention MFLOPs/layer | {fd / 1e6:.1f} | {fs / 1e6:.1f} |")
+        out.append(
+            f"| | | **{100 * (1 - tiles_v / max(tiles_t, 1)):.0f}% skipped** |"
+        )
+        out.append("")
+        out.append(
+            f"layout: n_refresh={k.get('refresh_n_q', '—')} gathered queries "
+            f"vs kv_len={k.get('refresh_kv_len', '—')} cache slots "
+            f"(`WindowLayout`-static map, `kernels/flash_refresh.py`)"
+        )
+    else:
+        out.append("| (refresh section missing from JSON) | | |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    args = [a for a in sys.argv[1:]]
+    mode = "repro"
+    if "--ci-summary" in args:
+        mode = "ci"
+        args.remove("--ci-summary")
+    path = args[0] if args else "experiments/bench_results.json"
+    r = json.load(open(path))
+    print(ci_summary(r) if mode == "ci" else reproduction_table(r))
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,7 @@ import argparse
 import importlib
 import json
 import os
+import sys
 import time
 import traceback
 
@@ -41,6 +42,7 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     results = {}
+    failed = []
     for name, module, figure in BENCHES:
         if args.only and name not in args.only:
             continue
@@ -53,12 +55,18 @@ def main() -> None:
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             results[name] = {"error": traceback.format_exc(limit=3)}
+            failed.append(name)
             print(f"{name},0.0,ERROR", flush=True)
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1, default=str)
     print(f"# wrote {args.out}")
+    if failed:
+        # the JSON (with the error payloads) is still written above, but
+        # CI must see bench breakage as a red step, not a green no-op
+        print(f"# FAILED: {', '.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

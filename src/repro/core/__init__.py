@@ -10,14 +10,14 @@ from .pruning import (
     pruning_stats, group_mask,
 )
 from .kvc import (
-    WindowLayout, shift_cache, reuse_caches, shift_valid,
-    selective_refresh, full_prefill,
+    WindowLayout, refresh_block_map, shift_cache, reuse_caches,
+    shift_valid, selective_refresh, full_prefill,
 )
 
 __all__ = [
     "motion_mask", "block_to_patch",
     "PruneDecision", "select_tokens", "full_decision", "capacity_groups",
     "pruning_stats", "group_mask",
-    "WindowLayout", "shift_cache", "reuse_caches", "shift_valid",
-    "selective_refresh", "full_prefill",
+    "WindowLayout", "refresh_block_map", "shift_cache", "reuse_caches",
+    "shift_valid", "selective_refresh", "full_prefill",
 ]

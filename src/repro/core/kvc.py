@@ -31,6 +31,7 @@ import numpy as np
 
 from ..configs.base import CodecCfg, ModelCfg, ViTCfg
 from ..kernels import ops
+from ..kernels.flash_refresh import RefreshBlockMap, build_block_map
 from ..models import transformer as tfm
 from ..models.layers import KVCache
 from ..models import layers
@@ -123,6 +124,40 @@ class WindowLayout:
 
 
 # ======================================================================
+# Refresh block map (static tile geometry for the flash_refresh kernel)
+# ======================================================================
+@functools.lru_cache(maxsize=None)
+def refresh_block_map(
+    layout: WindowLayout,
+    *,
+    tq: int = 128,
+    tk: int = 128,
+    window: Optional[int] = None,
+    kv_len: Optional[int] = None,
+) -> RefreshBlockMap:
+    """The (q-tile -> kv-tile) visit list of the selective-refresh pass.
+
+    The refresh query positions and the cache extent are both static
+    functions of the ``WindowLayout``, so the map is computed ONCE per
+    (layout, tile sizes, sliding window) — not per window, not per
+    layer — and shared by every attention layer of every refresh call.
+    ``window`` is the model's sliding-window size (None = full causal).
+
+    ``kv_len`` (default ``layout.total_len``) lets serving cover its
+    full tile-padded cache allocation: every slot past ``total_len`` is
+    above all refresh query positions, so the causal bound alone keeps
+    those tiles out of the visit list.
+    """
+    if kv_len is None:
+        kv_len = layout.total_len
+    assert kv_len >= layout.total_len, (kv_len, layout.total_len)
+    return build_block_map(
+        layout.refresh_token_idx, kv_len,
+        tq=tq, tk=tk, causal=True, window=window,
+    )
+
+
+# ======================================================================
 # KVC Reuser (position-consistent reuse, Eq. 5)
 # ======================================================================
 def shift_cache(
@@ -190,6 +225,7 @@ def selective_refresh(
     layout: WindowLayout,
     *,
     q_chunk: int = 1024,
+    block_map: Optional[RefreshBlockMap] = None,
 ):
     """Recompute the refresh set against the reused cache.
 
@@ -201,9 +237,13 @@ def selective_refresh(
       refresh_valid: (B, n_refresh) bool.
       kv_valid: (B, total_len) bool — validity of the full cache AFTER
         this refresh (shifted old validity with refresh positions set).
+      block_map: static tile map for the flash_refresh kernel; derived
+        from the layout (cached) when not supplied.
 
     Returns: (last-token logits (B, V), new caches, refresh hiddens).
     """
+    if block_map is None:
+        block_map = refresh_block_map(layout, window=cfg.sliding_window)
     idx = jnp.asarray(layout.refresh_token_idx)
     B = refresh_embeds.shape[0]
     positions = jnp.broadcast_to(idx[None], (B, idx.shape[0]))
@@ -216,6 +256,7 @@ def selective_refresh(
         cfg, params, h, positions, None, caches,
         cache_offset=None, cache_len=layout.total_len,
         scatter_idx=idx, kv_valid=kv_full, q_chunk=q_chunk,
+        block_map=block_map,
     )
     hn = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = tfm.lm_logits(cfg, params, hn[:, -1])

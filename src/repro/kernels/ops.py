@@ -16,9 +16,11 @@ from contextlib import contextmanager
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref
 from .flash_prefill import flash_prefill_pallas
+from .flash_refresh import RefreshBlockMap, flash_refresh_pallas
 from .mv_sad import mv_sad_pallas
 from .rope_shift import rope_shift_pallas
 from .ssd_scan import ssd_scan_pallas
@@ -79,6 +81,104 @@ def flash_prefill(q, k, v, *, causal=True, window=None, q_offset=0):
     return ref.flash_prefill_ref(
         q, k, v, causal=causal, window=window, q_offset=q_offset
     )
+
+
+def flash_refresh(
+    q,
+    k,
+    v,
+    q_pos,
+    kv_valid=None,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_map: RefreshBlockMap | None = None,
+    q_chunk: int = 1024,
+):
+    """Masked attention over gathered query positions (KVC refresh).
+
+    q: (B, Sq, H, D); k, v: (B, Sk, Hkv, D); q_pos: (B, Sq) int32 token
+    positions; kv_valid: (B, Sk) bool or None.  Key positions are
+    implicitly ``arange(Sk)`` (cache coordinates).
+
+    The Pallas block-sparse kernel is used when a ``block_map`` built
+    for these exact shapes and mask settings is supplied (the serving
+    path derives one per ``WindowLayout``); otherwise — CPU, unaligned
+    shapes, or no map — the q-chunked jnp oracle runs.
+    """
+    use, interp = _use_pallas()
+    B, Sq = q.shape[:2]
+    Sk = k.shape[1]
+    if (
+        use
+        and block_map is not None
+        and block_map.n_q == Sq
+        and block_map.kv_len == Sk
+        and Sk % block_map.tk == 0
+        and block_map.causal == causal
+        and block_map.window == window
+        and _positions_match_map(q_pos, block_map)
+    ):
+        bm = block_map
+        pad = bm.q_pos.shape[0] - Sq
+        qp = jnp.asarray(bm.q_pos)
+        qq = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+        kvm = kv_valid if kv_valid is not None else jnp.ones((B, Sk), bool)
+        out = flash_refresh_pallas(
+            qq, k, v, qp, kvm,
+            jnp.asarray(bm.tile_ids), jnp.asarray(bm.tile_count),
+            causal=causal, window=window, tq=bm.tq, tk=bm.tk,
+            interpret=interp,
+        )
+        return out[:, :Sq]
+    return _flash_refresh_ref_chunked(
+        q, k, v, q_pos, kv_valid, causal=causal, window=window,
+        q_chunk=q_chunk,
+    )
+
+
+def _positions_match_map(q_pos, bm: RefreshBlockMap) -> bool:
+    """The kernel masks by the MAP's positions, so a concrete ``q_pos``
+    must equal them; a mismatch routes to the oracle (which honors the
+    caller's positions) instead of silently masking by stale ones.
+    Traced positions (jit) can't be inspected — the caller passing a
+    map is then the contract, as in the serving closure."""
+    try:
+        conc = np.asarray(q_pos)
+    except Exception:          # tracer inside jit
+        return True
+    return bool(
+        (conc == np.broadcast_to(bm.q_pos[: bm.n_q], conc.shape)).all()
+    )
+
+
+def _flash_refresh_ref_chunked(
+    q, k, v, q_pos, kv_valid, *, causal, window, q_chunk
+):
+    """Oracle execution path, chunked over queries (peak activation
+    ~ q_chunk x Sk instead of Sq x Sk — same discipline as the dense
+    ``layers.mha`` path it replaces)."""
+    B, Sq, H, D = q.shape
+    if Sq <= q_chunk:
+        return ref.flash_refresh_ref(
+            q, k, v, q_pos, kv_valid, causal=causal, window=window
+        )
+    pad = (-Sq) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # padded rows carry position -1: fully masked, output zeros
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-1)
+    nq = (Sq + pad) // q_chunk
+    qs = q.reshape(B, nq, q_chunk, H, D).transpose(1, 0, 2, 3, 4)
+    ps = q_pos.reshape(B, nq, q_chunk).transpose(1, 0, 2)
+    outs = jax.lax.map(
+        lambda t: ref.flash_refresh_ref(
+            t[0], k, v, t[1], kv_valid, causal=causal, window=window
+        ),
+        (qs, ps),
+    )
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq + pad, H, D)
+    return out[:, :Sq]
 
 
 def ssd_scan(x, log_a, b, c, init_state=None, chunk: int = 128):

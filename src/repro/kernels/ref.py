@@ -132,6 +132,67 @@ def flash_prefill_ref(
 
 
 # ----------------------------------------------------------------------
+# flash_refresh: masked attention over gathered query positions
+# ----------------------------------------------------------------------
+def flash_refresh_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,
+    kv_valid: jnp.ndarray | None = None,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+):
+    """Oracle for the block-sparse refresh kernel.
+
+    Key positions are implicitly ``arange(Sk)`` (the cache coordinate
+    system); query positions are explicit and may be non-contiguous
+    (CodecFlow's refresh set).  Numerics mirror ``layers.mha``: the
+    scaled query is rounded to the K/V storage dtype and attention
+    weights to the V dtype, with f32 accumulation — so the cached
+    attention paths are bit-compatible with the pre-kernel code.
+
+    Args:
+      q: (B, Sq, H, D) gathered queries.
+      k, v: (B, Sk, Hkv, D).
+      q_pos: (B, Sq) int32 token position of each query row.
+      kv_valid: (B, Sk) bool or None — per-token cache validity.
+
+    Returns (B, Sq, H, D).  Fully-masked query rows are exact zeros
+    (the kernel contract; such rows arise from q-tile padding or
+    all-invalid caches).
+    """
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qq = (q.astype(jnp.float32) * scale).astype(k.dtype)
+    qq = qq.reshape(B, Sq, Hkv, g, D)
+    logits = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qq, k, preferred_element_type=jnp.float32
+    )                                                  # (B, Hkv, g, Sq, Sk)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((B, Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        mask &= kpos[None, None, :] > q_pos[:, :, None] - window
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, :]
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum(
+        "bkgqs,bskd->bqkgd", p, v, preferred_element_type=jnp.float32
+    )
+    out = out.reshape(B, Sq, H, D)
+    alive = mask.any(axis=-1)                          # (B, Sq)
+    return jnp.where(alive[..., None, None], out, 0.0).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
 # ssd_scan: Mamba-2 state-space duality, exact sequential recurrence
 # ----------------------------------------------------------------------
 def ssd_scan_ref(

@@ -164,6 +164,7 @@ def attention_block(
     *,
     causal: bool = True,
     q_chunk: int = 1024,
+    block_map=None,
 ) -> Tuple[jnp.ndarray, Optional[KVCache]]:
     """Unified attention block.
 
@@ -174,6 +175,14 @@ def attention_block(
       * scatter (``scatter_idx`` (T,) token positions): CodecFlow's
         selective KVC refresh — anchors sit at non-contiguous positions.
         ``kv_valid`` (B, S) must then describe the full cache validity.
+    Both cached modes dispatch through ``ops.flash_refresh`` (keys live
+    in cache coordinates): the Pallas block-sparse kernel when a
+    ``block_map`` for this geometry is supplied, the q-chunked oracle
+    otherwise — no dense (B, S) score mask is materialized on the
+    kernel path.  ``block_map`` applies only to the scatter mode: its
+    ``q_pos`` must equal the scatter positions, which only that mode
+    guarantees (the contiguous mode's positions depend on the dynamic
+    ``cache_offset``).
     """
     B, T, _ = x.shape
     q, k, v = _qkv(p, cfg, x, positions)
@@ -189,10 +198,10 @@ def attention_block(
         new_cache = KVCache(ck, cv)
         S = cache_len if cache_len is not None else ck.shape[1]
         kk, vv = ck[:, :S], cv[:, :S]
-        kpos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
         kval = kv_valid[:, :S] if kv_valid is not None else None
-        out = mha(q, kk, vv, positions, kpos, kval, causal=causal,
-                  window=window, q_chunk=q_chunk)
+        out = ops.flash_refresh(q, kk, vv, positions, kval, causal=causal,
+                                window=window, block_map=block_map,
+                                q_chunk=q_chunk)
     else:
         ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), cache_offset, 1)
         cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), cache_offset, 1)
@@ -200,16 +209,16 @@ def attention_block(
         S = cache_len if cache_len is not None else ck.shape[1]
         kk = ck[:, :S]
         vv = cv[:, :S]
-        kpos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
-        kval = kpos <= (cache_offset + T - 1)
+        kpos = jnp.arange(S)[None]
+        kval = jnp.broadcast_to(kpos <= (cache_offset + T - 1), (B, S))
         if kv_valid is not None:
             kval &= kv_valid[:, :S]
         if valid is not None:
             kval &= jax.lax.dynamic_update_slice_in_dim(
                 jnp.ones((B, ck.shape[1]), bool), valid, cache_offset, 1
             )[:, :S]
-        out = mha(q, kk, vv, positions, kpos, kval, causal=causal,
-                  window=window, q_chunk=q_chunk)
+        out = ops.flash_refresh(q, kk, vv, positions, kval, causal=causal,
+                                window=window, q_chunk=q_chunk)
 
     out = out.reshape(B, T, cfg.n_heads * cfg.d_head) @ p["wo"]
     return out, new_cache
@@ -448,18 +457,24 @@ def mamba_decode(p, cfg: ModelCfg, x: jnp.ndarray, cache: SSMCache):
     acc = p["conv_b"].astype(F32) + jnp.einsum(
         "bkc,kc->bc", window.astype(F32), p["conv_w"].astype(F32)
     )
-    conv_out = jax.nn.silu(acc)
+    # round through the storage dtype exactly as the prefill path does
+    # (mamba_block casts the conv output and the SSD operands to x.dtype
+    # before the scan) so decode stays on the prefill numeric trajectory.
+    conv_out = jax.nn.silu(acc).astype(x.dtype).astype(F32)
     new_tail = window[:, 1:]
     xin, b, c = jnp.split(conv_out, [di, di + gn], axis=-1)
 
     dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"].astype(F32))   # (B,nh)
     A = -jnp.exp(p["A_log"].astype(F32))
     log_a = dt * A[None, :]
-    xh = (xin * jnp.repeat(dt, P, -1)).reshape(B, nh, P)
+    xh = (xin * jnp.repeat(dt, P, -1)).reshape(B, nh, P).astype(x.dtype)
     bg = jnp.repeat(b.reshape(B, s.n_groups, s.d_state), nh // s.n_groups, 1)
     cg = jnp.repeat(c.reshape(B, s.n_groups, s.d_state), nh // s.n_groups, 1)
-    y, new_state = ssd_decode_ref(cache.ssm, xh, log_a, bg, cg)
-    y = y.reshape(B, di) + xin * p["D"].astype(F32)[jnp.repeat(jnp.arange(nh), P)][None]
+    y, new_state = ssd_decode_ref(
+        cache.ssm, xh, log_a, bg.astype(x.dtype), cg.astype(x.dtype)
+    )
+    y = y.astype(F32).reshape(B, di) + xin * p["D"].astype(F32)[
+        jnp.repeat(jnp.arange(nh), P)][None]
 
     y = y * jax.nn.silu(z.astype(F32))
     var = jnp.mean(y * y, axis=-1, keepdims=True)

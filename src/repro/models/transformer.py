@@ -138,6 +138,7 @@ def _apply_block(
     q_chunk: int,
     scatter_idx=None,
     kv_valid=None,
+    block_map=None,
 ):
     mixer, ffn = cfg.block_kind(pos)
     hn = layers.rmsnorm(p["ln1"], h, cfg.norm_eps)
@@ -147,7 +148,7 @@ def _apply_block(
             p["mixer"], cfg, hn, positions, valid,
             cache=cache, cache_offset=cache_offset, cache_len=cache_len,
             scatter_idx=scatter_idx, kv_valid=kv_valid,
-            q_chunk=q_chunk,
+            q_chunk=q_chunk, block_map=block_map,
         )
     else:
         if decode:
@@ -186,8 +187,14 @@ def run_stack(
     remat: bool = False,
     scatter_idx=None,
     kv_valid=None,
+    block_map=None,
 ):
-    """Scan the block stack.  Returns (h, new_caches, aux_sum)."""
+    """Scan the block stack.  Returns (h, new_caches, aux_sum).
+
+    ``block_map`` (a ``kernels.flash_refresh.RefreshBlockMap``) is the
+    static tile-visit list for the cached attention modes; the same
+    geometry applies to every attention layer in the stack.
+    """
     use_cache = caches is not None
     has_cross = use_cache and caches.cross is not None
     xs = (params["blocks"],)
@@ -224,6 +231,7 @@ def run_stack(
                 lc[pos], cache_offset, cache_len, cross_kv,
                 decode=decode, q_chunk=q_chunk,
                 scatter_idx=scatter_idx, kv_valid=kv_valid,
+                block_map=block_map,
             )
             new_caches.append(nc)
             aux = aux + a

@@ -43,7 +43,8 @@ from ..configs.base import CodecCfg, ModelCfg, ViTCfg
 from ..codec import StreamDecoder, encode_stream
 from ..codec.metadata import CodecMetadata
 from ..core import (
-    WindowLayout, capacity_groups, motion_mask, reuse_caches, select_tokens,
+    WindowLayout, capacity_groups, motion_mask, refresh_block_map,
+    reuse_caches, select_tokens,
 )
 from ..models import layers
 from ..models import transformer as tfm
@@ -299,13 +300,20 @@ class PrefillBackend(Protocol):
 class AttentionPrefill:
     """Fresh prefill + windowed KVC reuse / selective refresh (Eq. 5)."""
 
+    # kv tile size of the flash_refresh kernel; the cache allocation is
+    # rounded up to it so the refresh pass attends a tile-aligned buffer
+    # (real layouts' total_len is never 128-aligned — without padding
+    # the kernel dispatch would silently fall back to the oracle)
+    KV_TILE = 128
+
     def __init__(self, cfg: ModelCfg, params, layout: WindowLayout,
                  ecfg: EngineCfg):
         self.cfg = cfg
         self.params = params
         self.layout = layout
         self.ecfg = ecfg
-        self.cache_slots = layout.total_len + ecfg.max_new_tokens
+        need = layout.total_len + ecfg.max_new_tokens
+        self.cache_slots = -(-need // self.KV_TILE) * self.KV_TILE
         qc = ecfg.q_chunk
         self._jit_prefill = jax.jit(
             lambda params, tokens, caches, valid, embeds, off: tfm.prefill(
@@ -314,6 +322,22 @@ class AttentionPrefill:
             )
         )
         self._jit_reuse = jax.jit(lambda caches: reuse_caches(cfg, caches, layout))
+        # Static-refresh modes recompute exactly the layout's refresh
+        # set every window, so the flash_refresh tile map is a per-layout
+        # constant (closed over by the jitted call below).  It covers
+        # the FULL padded allocation — the selective pass attends the
+        # whole tile-aligned cache, with the slots past total_len (decode
+        # scratch + padding) masked by causality alone (every refresh
+        # query position < total_len <= their positions).  cacheblend /
+        # vlcache pick their scatter set online — no static map; their
+        # dispatch falls back to the oracle path.
+        self.block_map = (
+            refresh_block_map(layout, window=cfg.sliding_window,
+                              kv_len=self.cache_slots)
+            if ecfg.mode in ("codecflow", "refresh_only") else None
+        )
+        block_map = self.block_map
+        alloc = self.cache_slots
 
         def selective(params, caches, remb, rval, kvv, idx):
             B = remb.shape[0]
@@ -322,8 +346,9 @@ class AttentionPrefill:
             h = remb.astype(params["embed"].dtype)
             h, new_caches, _ = tfm.run_stack(
                 cfg, params, h, positions, None, caches,
-                cache_offset=None, cache_len=layout.total_len,
+                cache_offset=None, cache_len=alloc,
                 scatter_idx=idx, kv_valid=kv_full, q_chunk=qc,
+                block_map=block_map,
             )
             hn = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
             logits = tfm.lm_logits(cfg, params, hn[:, -1])
@@ -603,7 +628,10 @@ class ServingPipeline:
             else AttentionPrefill(cfg, params_lm, self.layout, ecfg)
         )
         self.decoder = GreedyDecoder(cfg, params_lm, ecfg)
-        self.cache_slots = self.layout.total_len + ecfg.max_new_tokens
+        self.cache_slots = getattr(
+            self.backend, "cache_slots",
+            self.layout.total_len + ecfg.max_new_tokens,
+        )
 
     # ------------------------------------------------------------------
     def _query_embeds(self, S: int) -> jnp.ndarray:

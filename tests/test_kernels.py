@@ -6,8 +6,11 @@ import numpy as np
 import pytest
 from hypothesis_compat import given, settings, st  # optional dev dep
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.flash_prefill import flash_prefill_pallas
+from repro.kernels.flash_refresh import (
+    build_block_map, dense_block_map, flash_refresh_pallas,
+)
 from repro.kernels.mv_sad import mv_sad_pallas
 from repro.kernels.rope_shift import rope_shift_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
@@ -107,6 +110,161 @@ def test_flash_sliding_window():
     o_p = flash_prefill_pallas(q, k, v, window=64, interpret=True)
     o_r = ref.flash_prefill_ref(q, k, v, window=64)
     np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_r), atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# flash_refresh (block-sparse masked refresh attention)
+# ----------------------------------------------------------------------
+def _refresh_case(q_pos, sk, h, hkv, d, *, dtype=jnp.float32, seed=7,
+                  kv_valid_p=None, batch=2):
+    """Random (q, k, v, kv_valid) for a gathered-query attention case."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    sq = len(q_pos)
+    q = jax.random.normal(ks[0], (batch, sq, h, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (batch, sk, hkv, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (batch, sk, hkv, d)).astype(dtype)
+    if kv_valid_p is None:
+        kv_valid = jnp.ones((batch, sk), bool)
+    else:
+        kv_valid = jax.random.uniform(ks[3], (batch, sk)) > kv_valid_p
+    return q, k, v, kv_valid
+
+
+def _run_refresh_pallas(bm, q, k, v, kv_valid, window=None):
+    """Pad queries per the map and run the kernel in interpret mode."""
+    pad = bm.q_pos.shape[0] - q.shape[1]
+    qq = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+    out = flash_refresh_pallas(
+        qq, k, v, jnp.asarray(bm.q_pos), kv_valid,
+        jnp.asarray(bm.tile_ids), jnp.asarray(bm.tile_count),
+        window=window, tq=bm.tq, tk=bm.tk, interpret=True,
+    )
+    return out[:, : q.shape[1]]
+
+
+SCATTER_PATTERNS = {
+    # new-window positions of: I-frame anchors only / anchors + the
+    # new-stride-and-query tail (the codecflow refresh set) / one token
+    "anchors_only": np.arange(0, 32, dtype=np.int32),
+    "anchors_tail": np.concatenate([
+        np.arange(0, 24, dtype=np.int32),
+        np.arange(160, 256, dtype=np.int32),
+    ]),
+    "single_token": np.asarray([255], np.int32),
+}
+
+
+@pytest.mark.parametrize("pattern", sorted(SCATTER_PATTERNS))
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_refresh_matches_ref(pattern, dtype):
+    q_pos = SCATTER_PATTERNS[pattern]
+    sk = 256
+    q, k, v, kv_valid = _refresh_case(q_pos, sk, 4, 2, 32, dtype=dtype)
+    bm = build_block_map(q_pos, sk, tq=16, tk=32)
+    o_p = _run_refresh_pallas(bm, q, k, v, kv_valid)
+    qp = jnp.broadcast_to(jnp.asarray(q_pos)[None], (2, len(q_pos)))
+    o_r = ref.flash_refresh_ref(q, k, v, qp, kv_valid)
+    np.testing.assert_allclose(
+        np.asarray(o_p, np.float32), np.asarray(o_r, np.float32),
+        atol=3e-2 if dtype == jnp.bfloat16 else 1e-5,
+    )
+
+
+@pytest.mark.parametrize("h,hkv", [(4, 4), (4, 2), (8, 1)])
+def test_flash_refresh_gqa_groups(h, hkv):
+    q_pos = SCATTER_PATTERNS["anchors_tail"]
+    q, k, v, kv_valid = _refresh_case(q_pos, 256, h, hkv, 32, kv_valid_p=0.3)
+    bm = build_block_map(q_pos, 256, tq=8, tk=64)
+    o_p = _run_refresh_pallas(bm, q, k, v, kv_valid)
+    qp = jnp.broadcast_to(jnp.asarray(q_pos)[None], (2, len(q_pos)))
+    o_r = ref.flash_refresh_ref(q, k, v, qp, kv_valid)
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_r), atol=1e-5)
+
+
+def test_flash_refresh_ragged_kv_valid():
+    """Per-batch ragged validity: pruned-slot holes differ across the
+    batch; dead queries (all keys invalid or masked) must be zeros."""
+    q_pos = np.asarray([0, 3, 97, 130, 131], np.int32)
+    q, k, v, _ = _refresh_case(q_pos, 192, 4, 2, 16)
+    kv_valid = jnp.zeros((2, 192), bool)
+    kv_valid = kv_valid.at[0, 50:120].set(True)      # row 0: mid-cache band
+    kv_valid = kv_valid.at[1, ::3].set(True)         # row 1: every 3rd slot
+    bm = build_block_map(q_pos, 192, tq=8, tk=32)
+    o_p = _run_refresh_pallas(bm, q, k, v, kv_valid)
+    qp = jnp.broadcast_to(jnp.asarray(q_pos)[None], (2, len(q_pos)))
+    o_r = ref.flash_refresh_ref(q, k, v, qp, kv_valid)
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_r), atol=1e-5)
+    # batch row 0, queries at 0 and 3: no valid key <= qpos -> zeros
+    np.testing.assert_array_equal(np.asarray(o_p[0, :2]), 0.0)
+    assert float(jnp.abs(o_p[1, :2]).sum()) > 0     # row 1 sees key 0
+
+
+def test_flash_refresh_sliding_window():
+    q_pos = np.concatenate([np.arange(0, 16), np.arange(200, 232)]).astype(np.int32)
+    q, k, v, kv_valid = _refresh_case(q_pos, 256, 4, 2, 32, kv_valid_p=0.2)
+    bm = build_block_map(q_pos, 256, tq=16, tk=32, window=64)
+    assert bm.density < 1.0          # the window must prune tiles
+    o_p = _run_refresh_pallas(bm, q, k, v, kv_valid, window=64)
+    qp = jnp.broadcast_to(jnp.asarray(q_pos)[None], (2, len(q_pos)))
+    o_r = ref.flash_refresh_ref(q, k, v, qp, kv_valid, window=64)
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_r), atol=1e-5)
+
+
+def test_flash_refresh_ops_dispatch_uses_map():
+    """ops.flash_refresh: interpret mode + matching map -> kernel path;
+    mismatched map (different mask config) -> oracle; both agree."""
+    q_pos = SCATTER_PATTERNS["anchors_tail"]
+    q, k, v, kv_valid = _refresh_case(q_pos, 256, 4, 2, 32, kv_valid_p=0.4)
+    qp = jnp.broadcast_to(jnp.asarray(q_pos)[None], (2, len(q_pos)))
+    bm = build_block_map(q_pos, 256, tq=16, tk=32)
+    with ops.kernel_mode("interpret"):
+        o_kernel = ops.flash_refresh(q, k, v, qp, kv_valid, block_map=bm)
+        # a map built for a different sliding window must be refused
+        o_refused = ops.flash_refresh(
+            q, k, v, qp, kv_valid, window=64,
+            block_map=build_block_map(q_pos, 256, tq=16, tk=32),
+        )
+    o_ref = ref.flash_refresh_ref(q, k, v, qp, kv_valid)
+    np.testing.assert_allclose(np.asarray(o_kernel), np.asarray(o_ref), atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(o_refused),
+        np.asarray(ref.flash_refresh_ref(q, k, v, qp, kv_valid, window=64)),
+        atol=1e-6,
+    )
+    # concrete q_pos that disagrees with the map's positions must route
+    # to the oracle (which honors the caller's q_pos), never the kernel
+    qp_shift = qp + 1
+    with ops.kernel_mode("interpret"):
+        o_mismatch = ops.flash_refresh(q, k, v, qp_shift, kv_valid,
+                                       block_map=bm)
+    np.testing.assert_allclose(
+        np.asarray(o_mismatch),
+        np.asarray(ref.flash_refresh_ref(q, k, v, qp_shift, kv_valid)),
+        atol=1e-6,
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), tail=st.integers(1, 40),
+       holes=st.integers(0, 2))
+def test_flash_refresh_block_skip_preserves_output(seed, tail, holes):
+    """Property: the sparse block map (skipped tiles) computes the SAME
+    output as visiting every tile — skipping is purely elision of
+    all-masked work, never an approximation."""
+    rng = np.random.default_rng(seed)
+    sk = 128
+    anchors = np.sort(rng.choice(64, size=rng.integers(1, 12), replace=False))
+    q_pos = np.unique(np.concatenate(
+        [anchors, np.arange(sk - tail, sk)]
+    )).astype(np.int32)
+    q, k, v, _ = _refresh_case(q_pos, sk, 2, 2, 16, seed=seed)
+    kv_valid = jnp.asarray(rng.random((2, sk)) > 0.25 * holes)
+    sparse = build_block_map(q_pos, sk, tq=8, tk=16)
+    dense = dense_block_map(q_pos, sk, tq=8, tk=16)
+    assert dense.tile_count.min() == dense.n_kv_tiles
+    o_s = _run_refresh_pallas(sparse, q, k, v, kv_valid)
+    o_d = _run_refresh_pallas(dense, q, k, v, kv_valid)
+    np.testing.assert_array_equal(np.asarray(o_s), np.asarray(o_d))
 
 
 # ----------------------------------------------------------------------

@@ -9,7 +9,8 @@ import pytest
 
 from repro.configs.base import ModelCfg
 from repro.core.kvc import (
-    WindowLayout, full_prefill, reuse_caches, selective_refresh, shift_valid,
+    WindowLayout, full_prefill, refresh_block_map, reuse_caches,
+    selective_refresh, shift_valid,
 )
 from repro.models import transformer as tfm
 from repro.models import layers
@@ -47,6 +48,26 @@ def test_layout_requires_gop_aligned_stride():
     with pytest.raises(AssertionError):
         WindowLayout(window=8, stride=3, gop=4, g_tokens=4, k_tokens=2,
                      query_len=1)
+
+
+def test_refresh_block_map_from_layout():
+    """The tile map is a pure function of the layout: computed once
+    (cached), covering exactly the refresh queries, causally sound."""
+    bm = refresh_block_map(LAYOUT, tq=8, tk=8)
+    assert bm is refresh_block_map(LAYOUT, tq=8, tk=8)     # lru-cached
+    assert bm.n_q == LAYOUT.n_refresh
+    assert bm.kv_len == LAYOUT.total_len
+    # every live (q, k) pair with k <= q must be covered by some tile
+    qp = LAYOUT.refresh_token_idx
+    covered = np.zeros((bm.n_q_tiles, bm.n_kv_tiles), bool)
+    for i in range(bm.n_q_tiles):
+        covered[i, bm.tile_ids[i, : bm.tile_count[i]]] = True
+    for r, q in enumerate(qp):
+        for k in range(LAYOUT.total_len):
+            if k <= q:
+                assert covered[r // bm.tq, k // bm.tk], (q, k)
+    # the anchor rows must NOT visit tiles past the causal frontier
+    assert bm.density < 1.0
 
 
 def test_refresh_all_equals_full_prefill(setup):

@@ -42,6 +42,52 @@ def _pipeline(stack, mode, cfg=LM):
 
 
 # ----------------------------------------------------------------------
+# refresh kernel eligibility
+# ----------------------------------------------------------------------
+def test_attention_backend_geometry_is_kernel_eligible(stack):
+    """The serving cache allocation must be tile-aligned and the static
+    block map must cover exactly that allocation — the conditions
+    ``ops.flash_refresh`` requires to take the Pallas path on TPU
+    (real layouts' total_len is never a tile multiple on its own)."""
+    be = _pipeline(stack, "codecflow").backend
+    bm = be.block_map
+    assert bm is not None
+    assert be.cache_slots % be.KV_TILE == 0
+    assert bm.kv_len == be.cache_slots and bm.kv_len % bm.tk == 0
+    assert bm.n_q == be.layout.n_refresh
+    np.testing.assert_array_equal(
+        bm.q_pos[: bm.n_q], be.layout.refresh_token_idx)
+    # slots past total_len (decode scratch + tile padding) are above
+    # every refresh query position; causality must keep their tiles out
+    top_tile = (be.layout.total_len - 1) // bm.tk
+    assert bm.tile_ids[:, : bm.t_max].max() <= top_tile
+    # dynamic-refresh baselines get no static map
+    assert _pipeline(stack, "cacheblend").backend.block_map is None
+
+
+def test_selective_refresh_kernel_parity_end_to_end(stack):
+    """Serve the same stream with the oracle dispatch and with the
+    Pallas kernel (interpret mode): the refresh hot path must produce
+    the same answers and near-identical logits."""
+    from repro.kernels import ops as kops
+
+    _, _, streams = stack
+    per_mode = {}
+    for kmode in ("ref", "interpret"):
+        with kops.kernel_mode(kmode):
+            sched = Scheduler(_pipeline(stack, "codecflow"),
+                              max_concurrent=1)
+            sid = sched.submit(StreamRequest(0, streams[0]))
+            results = sched.run()[sid]
+        per_mode[kmode] = [r.stats for r in results]
+    assert len(per_mode["ref"]) == len(per_mode["interpret"]) == 3
+    for a, b in zip(per_mode["ref"], per_mode["interpret"]):
+        assert a.answer == b.answer
+        np.testing.assert_allclose(
+            a.logits_yes_no, b.logits_yes_no, atol=0.05)
+
+
+# ----------------------------------------------------------------------
 # session lifecycle
 # ----------------------------------------------------------------------
 def test_session_lifecycle(stack):
