@@ -99,6 +99,38 @@ def ci_summary(r) -> str:
     ]:
         v = k.get(key)
         out.append(f"| {label} | {fmt.format(v) if v is not None else '—'} |")
+    out += ["", "### Packed ViT encode (padded vs packed pruned path)", ""]
+    out += ["| keep_ratio | padded patches/s | packed patches/s | "
+            "FLOPs saved | buffer fill |",
+            "|---|---|---|---|---|"]
+    any_pack = False
+    for tag in ("0.5", "0.25"):
+        pps_pad = k.get(f"vitpack_{tag}_padded_patches_s")
+        pps_pack = k.get(f"vitpack_{tag}_packed_patches_s")
+        fd = k.get(f"vitpack_{tag}_flops_padded")
+        fp = k.get(f"vitpack_{tag}_flops_packed")
+        fill = k.get(f"vitpack_{tag}_fill")
+        if None in (pps_pad, pps_pack, fd, fp, fill):
+            continue
+        any_pack = True
+        out.append(
+            f"| {tag} | {pps_pad:,.0f} | {pps_pack:,.0f} | "
+            f"**{100 * (1 - fp / fd):.0f}%** ({fd / fp:.2f}x) | "
+            f"{100 * fill:.0f}% |"
+        )
+    if any_pack:
+        ms = k.get("vitpack_min_flop_speedup")
+        util = k.get("smoke_codecflow_pack_util")
+        out.append("")
+        out.append(
+            f"min FLOP-ledger speedup "
+            f"{'—' if ms is None else f'{ms:.2f}x'} (gate: >= 1.5x at "
+            f"keep_ratio <= 0.5); serve-smoke ViT lane utilization "
+            f"{'—' if util is None else f'{100 * util:.0f}%'} "
+            f"(`docs/vit_packing.md`)"
+        )
+    else:
+        out.append("| (vit packing section missing from JSON) | | | | |")
     out += ["", "### Refresh-attention block sparsity", ""]
     out += ["| | dense | block-sparse |", "|---|---|---|"]
     tiles_t, tiles_v = k.get("refresh_tiles_total"), k.get("refresh_tiles_visited")

@@ -6,8 +6,8 @@ correction) -> KVC Refresher (anchor-token selective refresh).
 """
 from .motion import motion_mask, block_to_patch
 from .pruning import (
-    PruneDecision, select_tokens, full_decision, capacity_groups,
-    pruning_stats, group_mask,
+    PACK_LEN_BUCKETS, PackPlan, PruneDecision, select_tokens,
+    full_decision, capacity_groups, pack_plan, pruning_stats, group_mask,
 )
 from .kvc import (
     WindowLayout, refresh_block_map, shift_cache, reuse_caches,
@@ -16,8 +16,9 @@ from .kvc import (
 
 __all__ = [
     "motion_mask", "block_to_patch",
-    "PruneDecision", "select_tokens", "full_decision", "capacity_groups",
-    "pruning_stats", "group_mask",
+    "PACK_LEN_BUCKETS", "PackPlan", "PruneDecision", "select_tokens",
+    "full_decision", "capacity_groups", "pack_plan", "pruning_stats",
+    "group_mask",
     "WindowLayout", "refresh_block_map", "shift_cache", "reuse_caches",
     "shift_valid", "selective_refresh", "full_prefill",
 ]

@@ -14,12 +14,14 @@ patches is dynamic, so the pixel-unshuffle projector layout stays valid.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs.base import CodecCfg, ViTCfg
+from ..kernels.flash_packed import PackBlockMap, build_pack_map
 
 F32 = jnp.float32
 
@@ -98,12 +100,178 @@ def full_decision(v: ViTCfg, t: int) -> PruneDecision:
 
 
 def pruning_stats(dec: PruneDecision) -> dict:
-    """Token-reduction accounting (paper Fig. 13/14)."""
-    kept = dec.group_valid.sum()
-    total = dec.group_dynamic.shape[0] * dec.group_dynamic.shape[1]
+    """Token-reduction accounting (paper Fig. 13/14).
+
+    One ``jax.device_get`` fetches the two decision fields together;
+    all statistics are then computed host-side — the previous field-wise
+    ``int()``/``float()`` coercions forced one blocking device sync per
+    statistic on every window.
+    """
+    gv, gd = jax.device_get((dec.group_valid, dec.group_dynamic))
+    kept = int(np.asarray(gv).sum())
+    gd = np.asarray(gd)
+    total = gd.shape[0] * gd.shape[1]
     return {
-        "kept_tokens": int(kept),
+        "kept_tokens": kept,
         "total_tokens": int(total),
         "pruned_frac": float(1.0 - kept / total),
-        "dynamic_frac": float(dec.group_dynamic.mean()),
+        "dynamic_frac": float(gd.mean()),
     }
+
+
+# ======================================================================
+# Cross-frame patch packing (packed variable-capacity ViT encode)
+# ======================================================================
+# Row-length buckets for the packed patch buffer.  A handful of static
+# lengths bounds jit recompiles of the packed encoder; the smallest
+# bucket that fits the largest single frame is chosen (a frame's kept
+# run never splits across rows, so L_pack >= max per-frame need).
+PACK_LEN_BUCKETS: Tuple[int, ...] = (128, 256, 512, 1024, 2048, 4096)
+
+# Rows / kept-group counts are quantized so steady-state serving sees a
+# small set of packed geometries (each distinct (rows, L_pack, K_pack)
+# is one compilation of the packed encoder).
+PACK_ROW_QUANTUM = 2
+PACK_GROUP_QUANTUM = 32
+
+
+class PackPlan(NamedTuple):
+    """Host-built packing layout for one fused batch of P-frames.
+
+    The plan maps the *kept* patch groups of ``n_frames`` frames into
+    contiguous runs of a ``(n_rows, l_pack)`` buffer (first-fit in frame
+    order; one frame never splits across rows) and records the sparse
+    projection geometry.  All arrays are host numpy; shapes are fixed by
+    the buckets so the jitted packed encoder retraces only per
+    geometry, not per packing layout.
+
+    Attributes:
+      l_pack: row length (a ``PACK_LEN_BUCKETS`` entry, tile-aligned).
+      patch_src: (n_rows, l_pack) int32 — flat index into the
+        ``(n_frames * n_patches)`` patchified batch; 0 for padding.
+      seg_id: (n_rows, l_pack) int32 — frame index per slot (segment id
+        for the block-diagonal kernel), -1 for padding.
+      group_src: (k_pack, g**2) int32 — flat index into the
+        ``(n_rows * l_pack)`` packed buffer for each kept group's
+        patches, pixel-unshuffle order.
+      group_dst: (k_pack,) int32 — destination slot in the flattened
+        ``(n_frames * k_groups)`` token grid; ``n_frames * k_groups``
+        (one past the end) for padding entries, which the scatter drops.
+      block_map: per-row kv-tile visit list for ``ops.flash_packed``.
+      n_frames, k_groups: decision geometry the plan was built for.
+      kept_patches: (n_frames,) int64 — kept patch count per frame.
+    """
+
+    l_pack: int
+    patch_src: np.ndarray
+    seg_id: np.ndarray
+    group_src: np.ndarray
+    group_dst: np.ndarray
+    block_map: PackBlockMap
+    n_frames: int
+    k_groups: int
+    kept_patches: np.ndarray
+
+    @property
+    def n_rows(self) -> int:
+        return self.patch_src.shape[0]
+
+    @property
+    def n_slots(self) -> int:
+        """Total packed buffer slots (incl. padding) — what the packed
+        encoder's per-token compute is proportional to."""
+        return self.patch_src.size
+
+    @property
+    def k_pack(self) -> int:
+        return self.group_dst.shape[0]
+
+    @property
+    def n_kept_groups(self) -> int:
+        return int((self.group_dst < self.n_frames * self.k_groups).sum())
+
+    @property
+    def fill(self) -> float:
+        """Live fraction of the packed buffer."""
+        return float((self.seg_id >= 0).mean())
+
+
+def _round_up(n: int, q: int) -> int:
+    return -(-max(n, 1) // q) * q
+
+
+def pack_plan(
+    dec: PruneDecision,
+    v: ViTCfg,
+    *,
+    buckets: Sequence[int] = PACK_LEN_BUCKETS,
+    tile: int = 128,
+    row_quantum: int = PACK_ROW_QUANTUM,
+    group_quantum: int = PACK_GROUP_QUANTUM,
+) -> PackPlan:
+    """Build the cross-frame packing layout from a batched decision.
+
+    Fetches the decision ONCE (single ``jax.device_get``), then packs
+    host-side: frames are laid into rows first-fit in frame order, each
+    kept group as a contiguous ``g**2``-patch run, so the packed buffer
+    holds only kept content (+ bucket slack) instead of every frame
+    padded to the static ``K_sel`` capacity.
+    """
+    gv, pi = jax.device_get((dec.group_valid, dec.patch_idx))
+    gv = np.asarray(gv, bool)
+    pi = np.asarray(pi, np.int64)
+    B, Kg = gv.shape
+    g2 = v.group ** 2
+    P = v.n_patches
+    needs = gv.sum(axis=1).astype(np.int64) * g2            # slots per frame
+
+    max_need = int(needs.max(initial=0))
+    fit = [b for b in buckets if b >= max(max_need, tile)]
+    l_pack = fit[0] if fit else _round_up(max_need, tile)
+
+    # first-fit in frame order; a frame's run never splits across rows
+    fills: list = []                                        # slots used/row
+    frames_in: list = []                                    # frame ids/row
+    placement = {}
+    for f in range(B):
+        need = int(needs[f])
+        if need == 0:
+            continue
+        for r, used in enumerate(fills):
+            if used + need <= l_pack:
+                placement[f] = (r, used)
+                fills[r] += need
+                frames_in[r].append(f)
+                break
+        else:
+            placement[f] = (len(fills), 0)
+            fills.append(need)
+            frames_in.append([f])
+    n_rows = _round_up(len(fills), row_quantum) if fills else row_quantum
+
+    patch_src = np.zeros((n_rows, l_pack), np.int32)
+    seg_id = np.full((n_rows, l_pack), -1, np.int32)
+    dsts, bases = [], []
+    for f, (r, off) in placement.items():
+        for j in np.nonzero(gv[f])[0]:
+            patch_src[r, off: off + g2] = f * P + pi[f, j * g2: (j + 1) * g2]
+            seg_id[r, off: off + g2] = f
+            dsts.append(f * Kg + int(j))
+            bases.append(r * l_pack + off)
+            off += g2
+
+    k_pack = _round_up(len(dsts), group_quantum)
+    group_dst = np.full((k_pack,), B * Kg, np.int32)        # pad -> dropped
+    group_base = np.zeros((k_pack,), np.int32)
+    if dsts:
+        group_dst[: len(dsts)] = np.asarray(dsts, np.int32)
+        group_base[: len(bases)] = np.asarray(bases, np.int32)
+    group_src = group_base[:, None] + np.arange(g2, dtype=np.int32)[None]
+
+    tq = tk = min(tile, l_pack)
+    block_map = build_pack_map(seg_id, tq=tq, tk=tk)
+    return PackPlan(
+        l_pack=l_pack, patch_src=patch_src, seg_id=seg_id,
+        group_src=group_src, group_dst=group_dst, block_map=block_map,
+        n_frames=B, k_groups=Kg, kept_patches=needs,
+    )

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
+from .flash_packed import flash_packed_pallas
 from .flash_prefill import flash_prefill_pallas
 from .flash_refresh import RefreshBlockMap, flash_refresh_pallas
 from .mv_sad import mv_sad_pallas
@@ -179,6 +180,92 @@ def _flash_refresh_ref_chunked(
     )
     out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq + pad, H, D)
     return out[:, :Sq]
+
+
+def flash_packed(
+    q,
+    k,
+    v,
+    seg_id,
+    tile_ids=None,
+    tile_count=None,
+    *,
+    tq: int = 128,
+    tk: int = 128,
+    q_chunk: int = 1024,
+):
+    """Block-diagonal attention over packed ViT rows (segment mask).
+
+    q: (R, L, H, D); k, v: (R, L, Hkv, D); seg_id: (R, L) int32 with -1
+    padding.  Attention never crosses segment (frame) boundaries.
+
+    The Pallas kernel runs when a per-row visit list (``tile_ids`` /
+    ``tile_count`` from ``build_pack_map``, dynamic values with shapes
+    matching this geometry) is supplied and ``L`` is tile-aligned;
+    otherwise — CPU, unaligned bucket, no map — the q-chunked jnp
+    oracle runs.
+    """
+    R, L = q.shape[:2]
+    use, interp = _use_pallas()
+    if (
+        use
+        and tile_ids is not None
+        and tile_count is not None
+        and L % tq == 0
+        and L % tk == 0
+        and tuple(tile_ids.shape[:2]) == (R, L // tq)
+        and tuple(tile_count.shape) == (R, L // tq)
+    ):
+        return flash_packed_pallas(
+            q, k, v, seg_id, tile_ids, tile_count,
+            tq=tq, tk=tk, interpret=interp,
+        )
+    return _flash_packed_ref_chunked(q, k, v, seg_id, q_chunk=q_chunk)
+
+
+def _flash_packed_ref_chunked(q, k, v, seg_id, *, q_chunk):
+    """Oracle path, chunked over the packed length (peak activation
+    ~ q_chunk x L instead of L x L per row — same discipline as the
+    dense ``layers.mha`` path it replaces)."""
+    R, L, H, D = q.shape
+    if L <= q_chunk:
+        return ref.flash_packed_ref(q, k, v, seg_id)
+    pad = (-L) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # padded query rows carry segment -1: fully masked, output zeros
+        qseg = jnp.pad(seg_id, ((0, 0), (0, pad)), constant_values=-1)
+    else:
+        qseg = seg_id
+    nq = (L + pad) // q_chunk
+    qs = q.reshape(R, nq, q_chunk, H, D).transpose(1, 0, 2, 3, 4)
+    ss = qseg.reshape(R, nq, q_chunk).transpose(1, 0, 2)
+    outs = jax.lax.map(
+        lambda t: _seg_chunk_ref(t[0], k, v, t[1], seg_id), (qs, ss)
+    )
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(R, L + pad, H, D)
+    return out[:, :L]
+
+
+def _seg_chunk_ref(qc, k, v, qseg, kseg):
+    """One query chunk of the packed oracle (asymmetric q/k segments)."""
+    R, T, H, D = qc.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    scale = D ** -0.5
+    qq = (qc.astype(jnp.float32) * scale).astype(k.dtype)
+    qq = qq.reshape(R, T, Hkv, g, D)
+    logits = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qq, k, preferred_element_type=jnp.float32
+    )
+    mask = (qseg[:, :, None] == kseg[:, None, :]) & (qseg[:, :, None] >= 0)
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum(
+        "bkgqs,bskd->bqkgd", p, v, preferred_element_type=jnp.float32
+    ).reshape(R, T, H, D)
+    alive = mask.any(axis=-1)
+    return jnp.where(alive[..., None, None], out, 0.0).astype(qc.dtype)
 
 
 def ssd_scan(x, log_a, b, c, init_state=None, chunk: int = 128):

@@ -193,6 +193,57 @@ def flash_refresh_ref(
 
 
 # ----------------------------------------------------------------------
+# flash_packed: block-diagonal (segment-masked) attention for packed ViT
+# ----------------------------------------------------------------------
+def flash_packed_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    seg_id: jnp.ndarray,
+    *,
+    scale: float | None = None,
+):
+    """Oracle for the block-diagonal packed-ViT kernel.
+
+    Slots attend iff they carry the same non-negative segment id — the
+    packed layout's frame boundaries.  No positional mask: ViT attention
+    is bidirectional.  Numerics mirror ``layers.mha`` (scaled query
+    rounded to the K/V storage dtype, attention weights to the V dtype,
+    f32 accumulation) so the packed encode is bit-compatible with the
+    masked ``_encoder`` path it replaces.
+
+    Args:
+      q: (R, L, H, D) packed queries.
+      k, v: (R, L, Hkv, D).
+      seg_id: (R, L) int32, -1 for padding slots.
+
+    Returns (R, L, H, D); padding slots are exact zeros (the kernel
+    contract — their rows are fully masked).
+    """
+    R, L, H, D = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qq = (q.astype(jnp.float32) * scale).astype(k.dtype)
+    qq = qq.reshape(R, L, Hkv, g, D)
+    logits = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qq, k, preferred_element_type=jnp.float32
+    )                                                  # (R, Hkv, g, L, L)
+    mask = (seg_id[:, :, None] == seg_id[:, None, :]) & (
+        seg_id[:, :, None] >= 0
+    )                                                  # (R, L, L)
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum(
+        "bkgqs,bskd->bqkgd", p, v, preferred_element_type=jnp.float32
+    )
+    out = out.reshape(R, L, H, D)
+    alive = mask.any(axis=-1)                          # (R, L)
+    return jnp.where(alive[..., None, None], out, 0.0).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
 # ssd_scan: Mamba-2 state-space duality, exact sequential recurrence
 # ----------------------------------------------------------------------
 def ssd_scan_ref(

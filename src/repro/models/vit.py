@@ -5,15 +5,30 @@ on a *selected subset* of patches (static capacity K_sel — the TPU
 adaptation of dynamic pruning, DESIGN.md §3), scatter the encoded
 patches back to the full grid, and apply the native 2x2 pixel-unshuffle
 projection so the downstream LLM token layout is unchanged.
+
+Two pruned execution paths:
+
+  * ``encode_pruned_tokens`` — the legacy *padded* path: every frame
+    carries ``K_sel`` lanes (slack masked), the full patch grid is
+    scattered back, and the projector consumes all ``n_groups`` rows.
+    Compute is proportional to worst-case capacity.
+  * ``encode_packed_tokens`` — the *packed* path: kept patch groups of
+    many frames share ``(rows, L_pack)`` buffers (``core.pruning
+    .pack_plan``), attention is block-diagonal per frame
+    (``ops.flash_packed``), and the projection gathers/projects/
+    scatters only kept groups.  Compute is proportional to codec-
+    reported motion, not capacity (docs/vit_packing.md).
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelCfg, ViTCfg
+from ..kernels import ops
 from . import layers
 from .init import ParamBuilder, split_tree, stack_layers
 
@@ -125,3 +140,76 @@ def encode_pruned_tokens(
     """Pruned ViT -> projected visual tokens (B, n_groups, d_lm)."""
     full = encode_pruned(params, v, frames, sel_idx, sel_valid, eps)
     return project(params, v, full)
+
+
+# ======================================================================
+# Packed variable-capacity path (cost proportional to kept content)
+# ======================================================================
+def _encoder_packed(
+    params, v: ViTCfg, h: jnp.ndarray, seg_id: jnp.ndarray,
+    tile_ids: jnp.ndarray, tile_count: jnp.ndarray, eps: float,
+    tq: int, tk: int,
+):
+    """ViT blocks over packed rows; attention is block-diagonal per
+    segment (frame) via ``ops.flash_packed``."""
+    R, L, _ = h.shape
+    dh = v.d_model // v.n_heads
+
+    def body(h, lp):
+        hn = layers.rmsnorm(lp["ln1"], h, eps)
+        q = (hn @ lp["wq"]).reshape(R, L, v.n_heads, dh)
+        k = (hn @ lp["wk"]).reshape(R, L, v.n_heads, dh)
+        vv = (hn @ lp["wv"]).reshape(R, L, v.n_heads, dh)
+        out = ops.flash_packed(q, k, vv, seg_id, tile_ids, tile_count,
+                               tq=tq, tk=tk)
+        h = h + out.reshape(R, L, v.d_model) @ lp["wo"]
+        hn = layers.rmsnorm(lp["ln2"], h, eps)
+        return h + layers.mlp_block(lp["ffn"], hn), None
+
+    h, _ = jax.lax.scan(body, h, params["blocks"])
+    return layers.rmsnorm(params["final_norm"], h, eps)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("v", "n_out", "tq", "tk", "eps")
+)
+def encode_packed_tokens(
+    params, v: ViTCfg, frames: jnp.ndarray,
+    patch_src: jnp.ndarray, seg_id: jnp.ndarray,
+    group_src: jnp.ndarray, group_dst: jnp.ndarray,
+    tile_ids: jnp.ndarray, tile_count: jnp.ndarray,
+    n_out: int, tq: int = 128, tk: int = 128, eps: float = 1e-5,
+) -> jnp.ndarray:
+    """Packed pruned ViT -> projected visual tokens, flat (n_out, d_lm).
+
+    Index arrays come from a ``core.pruning.PackPlan`` (host-built,
+    bucket-shaped): compute at every stage is proportional to kept
+    content instead of the padded ``K_sel`` capacity —
+
+      * patch embedding runs on the gathered kept patches only (the
+        padded path embeds the FULL grid before gathering);
+      * the encoder runs over ``rows * L_pack`` packed slots with
+        block-diagonal attention (dead cross-frame tiles skipped by the
+        kernel's visit list);
+      * the projector consumes only the ``k_pack`` kept group rows and
+        scatters tokens to their ``(frame, slot)`` destinations —
+        no full-grid scatter + dense ``n_groups`` matmul.
+
+    Returns (n_out, d_lm); slots of dropped/invalid groups are zeros,
+    matching ``encode_pruned_tokens``'s masked semantics.
+    """
+    x = patchify(frames, v).astype(params["patch_embed"].dtype)
+    flat = x.reshape(-1, x.shape[-1])                     # (B*P, patch^2)
+    sel = flat[patch_src]                                 # (R, Lp, patch^2)
+    pos = params["pos_embed"][patch_src % v.n_patches]
+    h = sel @ params["patch_embed"] + pos                 # (R, Lp, d)
+    h = _encoder_packed(params, v, h, seg_id, tile_ids, tile_count,
+                        eps, tq, tk)
+    R, Lp, d = h.shape
+    hf = h.reshape(R * Lp, d)
+    g2 = v.group ** 2
+    grp = hf[group_src.reshape(-1)].reshape(-1, g2 * d)   # (Kp, g^2*d)
+    tok = grp @ params["projector"]                       # (Kp, d_lm)
+    out = jnp.zeros((n_out + 1, tok.shape[-1]), tok.dtype)
+    out = out.at[group_dst].set(tok)                      # pad row -> n_out
+    return out[:n_out]

@@ -43,8 +43,8 @@ from ..configs.base import CodecCfg, ModelCfg, ViTCfg
 from ..codec import StreamDecoder, encode_stream
 from ..codec.metadata import CodecMetadata
 from ..core import (
-    WindowLayout, capacity_groups, motion_mask, refresh_block_map,
-    reuse_caches, select_tokens,
+    WindowLayout, capacity_groups, motion_mask, pack_plan,
+    refresh_block_map, reuse_caches, select_tokens,
 )
 from ..models import layers
 from ..models import transformer as tfm
@@ -69,6 +69,10 @@ class EngineCfg:
     cacheblend_ratio: float = 0.15   # refresh budget for the baseline
     vlcache_ratio: float = 0.15
     q_chunk: int = 1024
+    # pruned P-frames: pack kept patch groups across frames/streams into
+    # variable-capacity buffers (docs/vit_packing.md) instead of padding
+    # every frame to the static K_sel capacity
+    packed_vit: bool = True
 
 
 @dataclasses.dataclass
@@ -79,7 +83,8 @@ class WindowStats:
     tokens_valid: int
     tokens_refreshed: int
     vit_patches: int
-    flops_vit: float
+    vit_slots: int               # ViT lanes actually computed (packed
+    flops_vit: float             # buffer slots or padded capacity)
     flops_prefill: float
     flops_decode: float
     t_codec: float
@@ -183,41 +188,89 @@ class VisualEncoder:
     Frames are batched by coding type: all I-frames of all streams in
     one full-capacity ViT call, all P-frames in one pruned call — two
     jit invocations per *batch of windows* instead of two per stream.
+
+    The pruned call packs the kept patch groups of ALL streams' P-frames
+    into shared variable-capacity buffers (``core.pruning.pack_plan`` +
+    ``vitm.encode_packed_tokens``): one stream's quiet scene donates its
+    slack to another's busy one, and ViT compute tracks codec-reported
+    motion instead of the padded ``K_sel`` worst case.  ``packed=False``
+    keeps the legacy padded path (A/B benchmarks, parity tests).
     """
 
+    # packed-buffer kv tile; plan row lengths are bucket multiples of it
+    PACK_TILE = 128
+
     def __init__(self, v: ViTCfg, vparams, codec: CodecCfg,
-                 layout: WindowLayout, prune: bool):
+                 layout: WindowLayout, prune: bool, packed: bool = True):
         self.v = v
         self.vparams = vparams
         self.codec = codec
         self.layout = layout
         self.prune = prune
+        self.packed = packed and prune
+        self._range_cache: Dict[Tuple[int, int], tuple] = {}
         self._jit_full = jax.jit(lambda vp, f: vitm.encode_full(vp, v, f))
         self._jit_pruned = jax.jit(
             lambda vp, f, pi, pv: vitm.encode_pruned_tokens(vp, v, f, pi, pv)
         )
+
+    def _split_range(self, frame_range: range) -> tuple:
+        """(i_idx, p_idx, i_arr, p_arr) for a window frame range, cached
+        so the I/P membership scan and the ``jnp.asarray`` staging run
+        once per distinct range instead of on every encode call."""
+        key = (frame_range.start, frame_range.stop)
+        hit = self._range_cache.get(key)
+        if hit is None:
+            lay = self.layout
+            i_idx = [f for f in frame_range
+                     if lay.frame_is_i(f) or not self.prune]
+            i_set = frozenset(i_idx)
+            p_idx = [f for f in frame_range if f not in i_set]
+            hit = (i_idx, p_idx,
+                   jnp.asarray(i_idx) if i_idx else None,
+                   jnp.asarray(p_idx) if p_idx else None)
+            self._range_cache[key] = hit
+        return hit
+
+    def _encode_packed(self, pframes: jnp.ndarray, dec) -> Tuple[jnp.ndarray, int]:
+        """Packed pruned encode of a flat (B, H, W) P-frame batch.
+
+        Returns ((B, k_tokens, d_lm) tokens, packed slot count)."""
+        v, kg = self.v, self.layout.k_tokens
+        plan = pack_plan(dec, v, tile=self.PACK_TILE)
+        bm = plan.block_map
+        toks = vitm.encode_packed_tokens(
+            self.vparams, v, pframes,
+            jnp.asarray(plan.patch_src), jnp.asarray(plan.seg_id),
+            jnp.asarray(plan.group_src), jnp.asarray(plan.group_dst),
+            jnp.asarray(bm.tile_ids), jnp.asarray(bm.tile_count),
+            n_out=plan.n_frames * kg, tq=bm.tq, tk=bm.tk,
+        )
+        return toks.reshape(plan.n_frames, kg, -1), plan.n_slots
 
     def encode(
         self,
         frames: jnp.ndarray,                 # (S, W, H, Wd)
         metas: Sequence[CodecMetadata],      # len S, per-window metadata
         frame_range: range,
-    ) -> Tuple[jnp.ndarray, jnp.ndarray, np.ndarray]:
+    ) -> Tuple[jnp.ndarray, jnp.ndarray, np.ndarray, np.ndarray]:
         """Encode frames [range) of every stream's window.
 
-        Returns (embeds (S, n_tok, d), valid (S, n_tok), patches (S,)):
-        per-stream token embeds packed per the layout.
+        Returns (embeds (S, n_tok, d), valid (S, n_tok), patches (S,),
+        slots (S,)): per-stream token embeds packed per the layout;
+        ``slots`` counts the ViT lanes actually computed per stream
+        (packed buffer share or padded capacity).
         """
         lay, v = self.layout, self.v
         S = frames.shape[0]
-        i_idx = [f for f in frame_range if lay.frame_is_i(f) or not self.prune]
-        p_idx = [f for f in frame_range if f not in i_idx]
+        i_idx, p_idx, i_arr, p_arr = self._split_range(frame_range)
         toks_by_frame: dict = {}
         val_by_frame: dict = {}
         patches = np.zeros((S,), np.int64)
+        slots = np.zeros((S,), np.int64)
 
         if i_idx:
-            sel = frames[:, jnp.asarray(i_idx)]              # (S, Ni, H, Wd)
+            sel = frames[:, i_arr]                           # (S, Ni, H, Wd)
             batch = sel.reshape((S * len(i_idx),) + sel.shape[2:])
             toks = self._jit_full(self.vparams, batch)       # (S*Ni, G, d)
             toks = toks.reshape((S, len(i_idx)) + toks.shape[1:])
@@ -226,6 +279,7 @@ class VisualEncoder:
                 toks_by_frame[f] = toks[:, j, :n_tok]
                 val_by_frame[f] = jnp.ones((S, n_tok), bool)
             patches += len(i_idx) * v.n_patches
+            slots += len(i_idx) * v.n_patches
 
         if p_idx:
             dyn, sco = [], []
@@ -235,16 +289,23 @@ class VisualEncoder:
                 sco.append(s)
             dyn = jnp.stack(dyn)                             # (S, W, pp, pp)
             sco = jnp.stack(sco)
-            pj = jnp.asarray(p_idx)
             Np = len(p_idx)
-            dsel = dyn[:, pj].reshape((S * Np,) + dyn.shape[2:])
-            ssel = sco[:, pj].reshape((S * Np,) + sco.shape[2:])
+            dsel = dyn[:, p_arr].reshape((S * Np,) + dyn.shape[2:])
+            ssel = sco[:, p_arr].reshape((S * Np,) + sco.shape[2:])
             dec = select_tokens(dsel, ssel, v, lay.k_tokens)
-            toks_full = self._jit_pruned(
-                self.vparams, frames[:, pj].reshape((S * Np,) + frames.shape[2:]),
-                dec.patch_idx, dec.patch_valid,
-            )                                                # (S*Np, G, d)
-            toks = jnp.take_along_axis(toks_full, dec.group_idx[..., None], 1)
+            pframes = frames[:, p_arr].reshape((S * Np,) + frames.shape[2:])
+            if self.packed:
+                toks, n_slots = self._encode_packed(pframes, dec)
+                # shared buffer: attribute slots evenly across streams
+                slots += -(-n_slots // S)
+            else:
+                toks_full = self._jit_pruned(
+                    self.vparams, pframes, dec.patch_idx, dec.patch_valid,
+                )                                            # (S*Np, G, d)
+                toks = jnp.take_along_axis(
+                    toks_full, dec.group_idx[..., None], 1
+                )
+                slots += Np * dec.patch_idx.shape[1]
             toks = toks.reshape((S, Np) + toks.shape[1:])
             gval = dec.group_valid.reshape(S, Np, -1)
             patches += np.asarray(
@@ -257,7 +318,7 @@ class VisualEncoder:
 
         embeds = jnp.concatenate([toks_by_frame[f] for f in frame_range], 1)
         valids = jnp.concatenate([val_by_frame[f] for f in frame_range], 1)
-        return embeds, valids, patches
+        return embeds, valids, patches, slots
 
 
 # ======================================================================
@@ -621,7 +682,8 @@ class ServingPipeline:
         self.is_streaming_family = cfg.family in ("ssm", "hybrid")
 
         self.frontend = CodecFrontend(c)
-        self.encoder = VisualEncoder(vit_cfg, params_vit, c, self.layout, prune)
+        self.encoder = VisualEncoder(vit_cfg, params_vit, c, self.layout,
+                                     prune, packed=ecfg.packed_vit)
         self.backend: PrefillBackend = (
             RecurrentPrefill(cfg, params_lm, self.layout, ecfg)
             if self.is_streaming_family
@@ -673,7 +735,7 @@ class ServingPipeline:
             rng = range(lay.window)
         else:
             rng = range(lay.window - lay.stride, lay.window)
-        vis, vval, patches = self.encoder.encode(frames, metas, rng)
+        vis, vval, patches, slots = self.encoder.encode(frames, metas, rng)
         qe = self._query_embeds(S)
         t_vit = time.perf_counter() - t0
 
@@ -701,6 +763,7 @@ class ServingPipeline:
                 tokens_valid=int(pr.tokens_valid[i]),
                 tokens_refreshed=pr.n_refreshed,
                 vit_patches=int(patches[i]),
+                vit_slots=int(slots[i]),
                 flops_vit=flopcount.vit_flops(self.v, int(patches[i])),
                 flops_prefill=pr.flops,
                 flops_decode=f_decode,

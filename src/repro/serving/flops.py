@@ -21,6 +21,37 @@ def vit_flops(v: ViTCfg, n_patches: int) -> float:
     return float(v.n_layers * per_layer + proj + embed)
 
 
+def vit_padded_flops(v: ViTCfg, n_frames: int, k_sel: int) -> float:
+    """Exact cost of the padded pruned path (``encode_pruned_tokens``):
+    full-grid patch embedding, ``k_sel`` masked attention lanes per
+    frame, full-grid ``n_groups`` projection — what the hardware pays
+    regardless of how many of the ``k_sel`` lanes are valid."""
+    d = v.d_model
+    embed = n_frames * v.n_patches * 2 * (v.patch ** 2) * d
+    per_tok = 2 * 4 * d * d + 2 * 3 * d * v.d_ff
+    attn = 4 * k_sel * k_sel * d
+    enc = v.n_layers * n_frames * (k_sel * per_tok + attn)
+    proj = n_frames * v.n_groups * 2 * (v.group ** 2 * d) * d
+    return float(embed + enc + proj)
+
+
+def vit_packed_flops(
+    v: ViTCfg, n_slots: int, visited_tiles: int, tq: int, tk: int,
+    k_pack: int,
+) -> float:
+    """Exact cost of the packed path (``encode_packed_tokens``):
+    gathered embedding + per-token work over the packed buffer slots,
+    attention only on the block map's visited (q, kv) tiles, projection
+    of the ``k_pack`` kept group rows."""
+    d = v.d_model
+    embed = n_slots * 2 * (v.patch ** 2) * d
+    per_tok = 2 * 4 * d * d + 2 * 3 * d * v.d_ff
+    attn = visited_tiles * 4 * tq * tk * d
+    enc = v.n_layers * (n_slots * per_tok + attn)
+    proj = k_pack * 2 * (v.group ** 2 * d) * d
+    return float(embed + enc + proj)
+
+
 def _layer_flops_per_token(cfg: ModelCfg, pos: int) -> float:
     d, dh = cfg.d_model, cfg.d_head
     mixer, ffn = cfg.block_kind(pos)

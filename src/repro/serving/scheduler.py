@@ -100,6 +100,10 @@ class Scheduler:
         self._next_sid = 0
         self.windows_served = 0
         self.t_serve = 0.0               # wall time inside poll()
+        # fleet-level ViT packing efficiency: kept patches vs lanes the
+        # encoder actually computed (padded capacity or packed buffer)
+        self.vit_patches = 0
+        self.vit_slots = 0
 
     # -- session lifecycle ---------------------------------------------
     def submit(self, request: StreamRequest) -> int:
@@ -208,9 +212,18 @@ class Scheduler:
             # frame buffers, by contrast, live from submit-time ingest)
             sess.state = None if sess.done else per_states[i]
             results.append(res)
+            self.vit_patches += st.vit_patches
+            self.vit_slots += st.vit_slots
         self.windows_served += len(results)
         self.t_serve += time.perf_counter() - t_poll0
         return results
+
+    @property
+    def vit_pack_utilization(self) -> float:
+        """Kept-patch fraction of the ViT lanes computed so far — the
+        cross-stream packing win the padded path cannot express (its
+        utilization is pinned at keep-fraction x capacity)."""
+        return self.vit_patches / max(self.vit_slots, 1)
 
     def run(self) -> Dict[int, List[WindowResult]]:
         """Drain every open session; per-session window results.

@@ -1,0 +1,221 @@
+"""Packed variable-capacity ViT encode: plan invariants, parity with
+the padded ``encode_pruned_tokens`` path and with ``encode_full`` at
+full keep, and multi-stream packing properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st  # optional dev dep
+
+from repro.configs.base import CodecCfg, ViTCfg
+from repro.core import (
+    capacity_groups, full_decision, pack_plan, select_tokens,
+)
+from repro.core.pruning import PACK_GROUP_QUANTUM
+from repro.models import vit as vitm
+from repro.models.init import ParamBuilder, split_tree
+
+V = ViTCfg(n_layers=2, d_model=64, n_heads=4, d_ff=128, patch=14,
+           image=112, group=2)
+G2 = V.group ** 2
+
+
+@pytest.fixture(scope="module")
+def vit_params():
+    pb = ParamBuilder(jax.random.PRNGKey(9))
+    return split_tree(vitm.init_vit(pb, V, 64))[0]
+
+
+def _random_decision(seed, b, keep, dyn_p=0.15):
+    rng = np.random.default_rng(seed)
+    pp = V.patches_per_side
+    dyn = jnp.asarray(rng.random((b, pp, pp)) < dyn_p)
+    sco = jnp.asarray(rng.random((b, pp, pp)), jnp.float32)
+    kg = capacity_groups(V, keep)
+    return select_tokens(dyn, sco, V, kg), kg
+
+
+def _frames(seed, b):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.random((b, V.image, V.image)) * 255, jnp.float32)
+
+
+def _encode_packed(params, frames, dec, kg, tile=128):
+    plan = pack_plan(dec, V, tile=tile)
+    bm = plan.block_map
+    out = vitm.encode_packed_tokens(
+        params, V, frames,
+        jnp.asarray(plan.patch_src), jnp.asarray(plan.seg_id),
+        jnp.asarray(plan.group_src), jnp.asarray(plan.group_dst),
+        jnp.asarray(bm.tile_ids), jnp.asarray(bm.tile_count),
+        n_out=plan.n_frames * kg, tq=bm.tq, tk=bm.tk,
+    )
+    return out.reshape(plan.n_frames, kg, -1), plan
+
+
+def _encode_padded(params, frames, dec):
+    toks_full = vitm.encode_pruned_tokens(
+        params, V, frames, dec.patch_idx, dec.patch_valid
+    )
+    return jnp.take_along_axis(toks_full, dec.group_idx[..., None], 1)
+
+
+def _assert_plan_invariants(plan, dec):
+    gv = np.asarray(dec.group_valid)
+    pi = np.asarray(dec.patch_idx)
+    b, kg = gv.shape
+    # every kept (frame, group) slot appears exactly once; padding
+    # entries point one past the output
+    live = plan.group_dst[plan.group_dst < b * kg]
+    assert len(live) == len(set(live.tolist())) == int(gv.sum())
+    expect = {f * kg + j for f in range(b) for j in np.nonzero(gv[f])[0]}
+    assert set(live.tolist()) == expect
+    # segment runs are contiguous, one frame per segment, never split
+    # across rows; packed patches match the decision's patch indices
+    for f in range(b):
+        rows = np.unique(np.nonzero(plan.seg_id == f)[0])
+        assert len(rows) <= 1
+        if len(rows):
+            sl = plan.seg_id[rows[0]]
+            pos = np.nonzero(sl == f)[0]
+            assert (np.diff(pos) == 1).all()
+            want = np.concatenate(
+                [f * V.n_patches + pi[f, j * G2: (j + 1) * G2]
+                 for j in np.nonzero(gv[f])[0]]
+            )
+            np.testing.assert_array_equal(
+                plan.patch_src[rows[0], pos], want)
+    # bucket + quantum discipline
+    assert plan.l_pack >= max(G2, int(gv.sum(1).max(initial=0)) * G2)
+    assert plan.k_pack % PACK_GROUP_QUANTUM == 0
+    assert plan.n_slots == plan.n_rows * plan.l_pack
+
+
+@pytest.mark.parametrize("keep,seed", [(0.25, 0), (0.5, 1), (0.9, 2)])
+def test_packed_matches_padded(vit_params, keep, seed):
+    """Bit-tolerance parity of the packed encode vs the padded masked
+    path on random motion decisions."""
+    b = 5
+    dec, kg = _random_decision(seed, b, keep)
+    frames = _frames(seed, b)
+    padded = _encode_padded(vit_params, frames, dec)
+    packed, plan = _encode_packed(vit_params, frames, dec, kg)
+    _assert_plan_invariants(plan, dec)
+    np.testing.assert_allclose(
+        np.asarray(packed, np.float32), np.asarray(padded, np.float32),
+        atol=3e-2,
+    )
+    # dropped group slots are exact zeros on both paths
+    gv = np.asarray(dec.group_valid)
+    np.testing.assert_array_equal(np.asarray(packed)[~gv], 0.0)
+
+
+def test_packed_full_keep_matches_encode_full(vit_params):
+    """keep_ratio=1.0 (the no-pruning decision): the packed path must
+    reproduce the dense full-grid encode."""
+    b = 3
+    frames = _frames(3, b)
+    dec = full_decision(V, b)
+    full = vitm.encode_full(vit_params, V, frames)
+    packed, plan = _encode_packed(vit_params, frames, dec, V.n_groups)
+    assert plan.n_kept_groups == b * V.n_groups
+    np.testing.assert_allclose(
+        np.asarray(packed, np.float32), np.asarray(full, np.float32),
+        atol=3e-2,
+    )
+
+
+def test_packed_all_static_batch(vit_params):
+    """Zero kept groups anywhere (fully static scene): the plan is all
+    padding and every output token is zero."""
+    b = 3
+    pp = V.patches_per_side
+    dyn = jnp.zeros((b, pp, pp), bool)
+    sco = jnp.zeros((b, pp, pp), jnp.float32)
+    kg = capacity_groups(V, 0.5)
+    dec = select_tokens(dyn, sco, V, kg)
+    packed, plan = _encode_packed(vit_params, _frames(4, b), dec, kg)
+    assert plan.n_kept_groups == 0 and plan.fill == 0.0
+    np.testing.assert_array_equal(np.asarray(packed), 0.0)
+
+
+def test_packed_multi_stream_layout_is_order_invariant(vit_params):
+    """Packing the same frames inside a bigger fused batch (multi-
+    stream scheduler layout) must not change any frame's tokens."""
+    dec_a, kg = _random_decision(7, 2, 0.5)
+    dec_b, _ = _random_decision(8, 3, 0.5)
+    fa, fb = _frames(7, 2), _frames(8, 3)
+    solo, _ = _encode_packed(vit_params, fa, dec_a, kg)
+    fused_dec = type(dec_a)(*[
+        jnp.concatenate([x, y], 0) for x, y in zip(dec_a, dec_b)
+    ])
+    fused, _ = _encode_packed(
+        vit_params, jnp.concatenate([fa, fb], 0), fused_dec, kg
+    )
+    np.testing.assert_allclose(
+        np.asarray(fused[:2], np.float32), np.asarray(solo, np.float32),
+        atol=3e-2,
+    )
+
+
+def test_visual_encoder_packed_matches_padded_serving():
+    """The serving stage with ``packed_vit`` on and off produces the
+    same embeds/valids for a batch of streams; the packed path computes
+    fewer ViT lanes."""
+    from repro.codec import StreamDecoder, encode_stream
+    from repro.data.video import VideoSpec, generate_video
+    from repro.core import WindowLayout
+
+    codec = CodecCfg(gop=4, block=16, search_radius=4, window_frames=8,
+                     stride_frames=4, keep_ratio=0.4)
+    kg = capacity_groups(V, codec.keep_ratio)
+    layout = WindowLayout(window=8, stride=4, gop=4,
+                          g_tokens=V.n_groups, k_tokens=kg, query_len=8)
+    pb = ParamBuilder(jax.random.PRNGKey(5))
+    vparams = split_tree(vitm.init_vit(pb, V, 64))[0]
+
+    frames_l, metas = [], []
+    for i in range(2):
+        raw, _ = generate_video(VideoSpec(
+            n_frames=8, height=V.image, width=V.image, seed=20 + i))
+        bs, meta = encode_stream(jnp.asarray(raw, jnp.float32), codec)
+        dec = StreamDecoder(codec)
+        dec.ingest(bs, meta)
+        wf, wm = dec.window(0)
+        frames_l.append(jnp.asarray(wf))
+        metas.append(wm)
+    batch = jnp.stack(frames_l, 0)
+
+    from repro.serving.api import VisualEncoder
+    outs = {}
+    for packed in (False, True):
+        enc = VisualEncoder(V, vparams, codec, layout, prune=True,
+                            packed=packed)
+        outs[packed] = enc.encode(batch, metas, range(8))
+    e0, v0, p0, s0 = outs[False]
+    e1, v1, p1, s1 = outs[True]
+    np.testing.assert_allclose(np.asarray(e1, np.float32),
+                               np.asarray(e0, np.float32), atol=3e-2)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v0))
+    np.testing.assert_array_equal(p1, p0)
+    assert s1.sum() < s0.sum()      # packed computes fewer lanes
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), b=st.integers(1, 6),
+       keep=st.sampled_from([0.25, 0.5, 1.0]),
+       dyn_p=st.sampled_from([0.0, 0.1, 0.6]))
+def test_packed_parity_property(vit_params, seed, b, keep, dyn_p):
+    """Property: for ANY motion mask density, batch size, and keep
+    ratio — including bucket-boundary and everything-kept layouts —
+    the packed encode equals the padded encode and the plan stays
+    well-formed."""
+    dec, kg = _random_decision(seed, b, keep, dyn_p)
+    frames = _frames(seed + 1, b)
+    padded = _encode_padded(vit_params, frames, dec)
+    packed, plan = _encode_packed(vit_params, frames, dec, kg)
+    _assert_plan_invariants(plan, dec)
+    np.testing.assert_allclose(
+        np.asarray(packed, np.float32), np.asarray(padded, np.float32),
+        atol=3e-2,
+    )
