@@ -27,6 +27,7 @@ from repro.core import (
     select_tokens,
 )
 from repro.kernels import ref
+from repro.kernels import ops as kernel_ops
 from repro.kernels.ops import flash_refresh, mv_sad, rope_shift, ssd_scan
 from repro.models import layers
 from repro.serving.flops import vit_packed_flops, vit_padded_flops
@@ -81,6 +82,27 @@ def run(emit) -> dict:
     out.update(_vit_packing(emit))
     if os.environ.get("BENCH_SMOKE"):
         out.update(_serve_smoke(emit))
+
+    # dispatch-decision ledger across the whole bench run: every op
+    # call above routed through the contract registry; a nonzero
+    # fallback count here means a bench scenario silently left the
+    # kernel path (the CI summary surfaces this next to throughput)
+    counts = kernel_ops.dispatch_counts()
+    eligible_n = sum(
+        c.get("kernel", 0) + c.get("backend:ok", 0) for c in counts.values()
+    )
+    fallback_n = sum(
+        v
+        for c in counts.values()
+        for key, v in c.items()
+        if key not in ("kernel", "backend:ok")
+    )
+    out["dispatch_kernel_decisions"] = eligible_n
+    out["dispatch_fallback_decisions"] = fallback_n
+    emit(csv_row(
+        "kernels/dispatch_coverage", 0.0,
+        f"{eligible_n} kernel-eligible / {fallback_n} fallback decisions",
+    ))
     return out
 
 
@@ -90,15 +112,21 @@ def _refresh_attention(emit) -> dict:
     H, Hkv, D = 8, 2, 64
     lay = WindowLayout(window=16, stride=4, gop=4, g_tokens=256,
                        k_tokens=128, query_len=32)
-    bm = refresh_block_map(lay)
-    nr, S = lay.n_refresh, lay.total_len
+    nr = lay.n_refresh
+    # serving rounds cache slots up to the 128-token KV tile; the raw
+    # total_len (2592) is not tile-aligned and would silently refuse
+    # the kernel path (contract rule 'k-tile' — tools.check catches it)
+    S = -(-lay.total_len // 128) * 128
+    bm = refresh_block_map(lay, kv_len=S)
 
     k = jax.random.PRNGKey(1)
     ks = jax.random.split(k, 4)
     q = jax.random.normal(ks[0], (1, nr, H, D), jnp.bfloat16)
     kk = jax.random.normal(ks[1], (1, S, Hkv, D), jnp.bfloat16)
     vv = jax.random.normal(ks[2], (1, S, Hkv, D), jnp.bfloat16)
-    kv_valid = jax.random.uniform(ks[3], (1, S)) > 0.3
+    kv_valid = (jax.random.uniform(ks[3], (1, S)) > 0.3).at[
+        :, lay.total_len:
+    ].set(False)
     qpos = jnp.asarray(lay.refresh_token_idx)[None]
 
     f_dense = jax.jit(

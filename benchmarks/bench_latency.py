@@ -8,7 +8,6 @@ the all-intra (per-frame JPEG-like) baseline the paper's clients use.
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.codec import encode_stream, estimate_bits
 from repro.configs.base import CodecCfg

@@ -7,7 +7,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.codec import encode_stream
 from repro.core import capacity_groups, motion_mask, reuse_caches, select_tokens

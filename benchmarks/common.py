@@ -9,9 +9,8 @@ from __future__ import annotations
 import functools
 import os
 import time
-from typing import Dict, List
+from typing import Dict
 
-import jax
 import numpy as np
 
 from repro.configs.base import CodecCfg, ModelCfg, ViTCfg

@@ -29,50 +29,50 @@ def reproduction_table(r) -> str:
         ("E2E speedup (Fig. 11)", "up to 2.97x (InternVL3)",
          f"wall {g('latency','codecflow','speedup_vs_fullcomp'):.2f}x / "
          f"FLOP-bound {g('latency','codecflow','speedup_flop_bound'):.2f}x"
-         if isinstance(g('latency','codecflow','speedup_vs_fullcomp'), float) else "—"),
+         if isinstance(g("latency","codecflow","speedup_vs_fullcomp"), float) else "—"),
         ("Transmission reduction (Fig. 11)", "2.12x",
          f"{g('latency','transmission','reduction_x'):.2f}x vs all-intra"
-         if isinstance(g('latency','transmission','reduction_x'), float) else "—"),
+         if isinstance(g("latency","transmission","reduction_x"), float) else "—"),
         ("F1 drop (Fig. 12)", "0 ~ 0.08",
          f"{g('accuracy','f1_drop_codecflow'):+.3f}"
-         if isinstance(g('accuracy','f1_drop_codecflow'), float) else "—"),
+         if isinstance(g("accuracy","f1_drop_codecflow"), float) else "—"),
         ("Token reduction (Fig. 13a)", "~85% vs Full-Comp",
          f"{g('resources','codecflow','token_reduction')*100:.0f}%"
-         if isinstance(g('resources','codecflow','token_reduction'), float) else "—"),
+         if isinstance(g("resources","codecflow","token_reduction"), float) else "—"),
         ("FLOP reduction (Fig. 13b)", "~87%",
          f"{g('resources','codecflow','flop_reduction')*100:.0f}%"
-         if isinstance(g('resources','codecflow','flop_reduction'), float) else "—"),
+         if isinstance(g("resources","codecflow","flop_reduction"), float) else "—"),
         ("Pruning falls with motion (Fig. 14)", "50/27/13% low/med/high",
          f"{g('motion','low','pruned_frac')*100:.0f}/"
          f"{g('motion','medium','pruned_frac')*100:.0f}/"
          f"{g('motion','high','pruned_frac')*100:.0f}% "
          f"(monotone={g('motion','pruning_monotone')})"
-         if isinstance(g('motion','low','pruned_frac'), float) else "—"),
+         if isinstance(g("motion","low","pruned_frac"), float) else "—"),
         ("Combined ablation saves most (Fig. 15)", "3.87x combined",
          f"combined_saves_most={g('ablation','combined_saves_most')}, "
          f"flops -{g('ablation','codecflow','flop_reduction')*100:.0f}% vs "
          f"prune-only -{g('ablation','prune_only','flop_reduction')*100:.0f}% / "
          f"refresh-only -{g('ablation','refresh_only','flop_reduction')*100:.0f}%"
-         if isinstance(g('ablation','codecflow','flop_reduction'), float) else "—"),
+         if isinstance(g("ablation","codecflow","flop_reduction"), float) else "—"),
         ("Smaller stride -> better F1 (Fig. 16)", "F1 0.84->0.89 at 20%",
          " / ".join(f"s{k}: F1={v['f1']:.2f}"
-                    for k, v in sorted(g('sensitivity','stride',
+                    for k, v in sorted(g("sensitivity","stride",
                                          default={}).items(),
                                        key=lambda kv: int(kv[0])))
          or "—"),
         ("Higher tau -> fewer tokens, lower F1 (Fig. 17)", "F1 0.81->0.73",
          " / ".join(f"tau{k}: F1={v['f1']:.2f},tok={v['tokens']:.0f}"
-                    for k, v in sorted(g('sensitivity','mv', default={}).items(),
+                    for k, v in sorted(g("sensitivity","mv", default={}).items(),
                                        key=lambda kv: float(kv[0])))
          or "—"),
         ("Larger GOP -> fewer refreshes (Fig. 18)", "F1 .77/.79/.81, latency falls",
          " / ".join(f"g{k}: F1={v['f1']:.2f},refresh={v['refreshed']:.0f}"
-                    for k, v in sorted(g('sensitivity','gop', default={}).items(),
+                    for k, v in sorted(g("sensitivity","gop", default={}).items(),
                                        key=lambda kv: int(kv[0])))
          or "—"),
         ("Decision overhead (Fig. 19)", "~4% of latency",
          f"{g('overhead','share_of_window')*100:.1f}%"
-         if isinstance(g('overhead','share_of_window'), float) else "—"),
+         if isinstance(g("overhead","share_of_window"), float) else "—"),
     ]
     out = ["| claim | paper | this repo |", "|---|---|---|"]
     out += [f"| {name} | {paper} | {ours} |" for name, paper, ours in rows]
@@ -99,6 +99,14 @@ def ci_summary(r) -> str:
     ]:
         v = k.get(key)
         out.append(f"| {label} | {fmt.format(v) if v is not None else '—'} |")
+    ok_n = k.get("dispatch_kernel_decisions")
+    fb_n = k.get("dispatch_fallback_decisions")
+    if ok_n is not None:
+        flag = " ⚠️ silent oracle fallback" if fb_n else ""
+        out.append(
+            f"| kernel dispatch coverage | {ok_n} kernel-eligible / "
+            f"{fb_n} fallback{flag} |"
+        )
     out += ["", "### Packed ViT encode (padded vs packed pruned path)", ""]
     out += ["| keep_ratio | padded patches/s | packed patches/s | "
             "FLOPs saved | buffer fill |",

@@ -17,8 +17,7 @@ memory and the compile *proof* come from the full-model compile.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict
 
 import jax
 

@@ -6,8 +6,7 @@ functions and hashed for compilation caches.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 
@@ -252,7 +251,7 @@ def smoke_variant(cfg: ModelCfg) -> ModelCfg:
         n_heads=n_heads,
         n_kv=n_kv,
         d_head=d_head,
-        d_ff=min(cfg.d_ff, 512) if 'none' not in cfg.ffn_pattern else 0,
+        d_ff=min(cfg.d_ff, 512) if "none" not in cfg.ffn_pattern else 0,
         vocab=min(cfg.vocab, 1024),
         qkv_bias=cfg.qkv_bias,
         block_pattern=cfg.block_pattern,

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import CodecCfg, ModelCfg, ViTCfg
+from ..configs.base import ModelCfg
 from ..kernels import ops
 from ..kernels.flash_refresh import RefreshBlockMap, build_block_map
 from ..models import transformer as tfm

@@ -17,7 +17,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import CodecCfg, ViTCfg
+from ..configs.base import CodecCfg
 from ..codec.metadata import CodecMetadata, I_FRAME
 
 F32 = jnp.float32

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import CodecCfg, ViTCfg
+from ..configs.base import ViTCfg
 from ..kernels.flash_packed import PackBlockMap, build_pack_map
 
 F32 = jnp.float32

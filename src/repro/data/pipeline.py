@@ -7,10 +7,8 @@ training driver exercises the same code path as serving.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Iterator, List, Optional, Tuple
+from typing import Iterator, List, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -68,7 +66,7 @@ def anomaly_dataset(
     the scene set is closed; events vary) so train/eval splits differ in
     dynamics, not scenery.
     """
-    from .video import VideoSpec, generate_video, motion_level_spec
+    from .video import generate_video, motion_level_spec
 
     rng = np.random.default_rng(seed)
     out = []

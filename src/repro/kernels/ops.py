@@ -12,13 +12,15 @@ The mode can be forced globally with ``set_kernel_mode`` for A/B tests.
 """
 from __future__ import annotations
 
+from collections import Counter, defaultdict
 from contextlib import contextmanager
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import ref
+from . import contracts, ref
+from .contracts import OK
 from .flash_packed import flash_packed_pallas
 from .flash_prefill import flash_prefill_pallas
 from .flash_refresh import RefreshBlockMap, flash_refresh_pallas
@@ -58,23 +60,75 @@ def _use_pallas() -> tuple[bool, bool]:
 
 
 # ----------------------------------------------------------------------
+# dispatch observability
+#
+# Every op records where a call went and why, keyed per op:
+#   "kernel"             Pallas kernel (compiled or interpret)
+#   "guard:<rule>"       backend wanted the kernel, an eligibility rule
+#                        refused — the *silent fallback* the static
+#                        analyzer (tools/check) proves absent on the
+#                        serving geometries
+#   "backend:ok"         oracle because the backend has no TPU, though
+#                        the geometry was kernel-eligible
+#   "backend:<rule>"     oracle by backend AND ineligible geometry
+#
+# Dispatch happens in Python (at trace time under jit), so these count
+# dispatch *decisions*: steady-state windows reuse compiled stages and
+# add nothing — a nonzero delta in steady state means a retrace.
+# ----------------------------------------------------------------------
+_COUNTS: "defaultdict[str, Counter]" = defaultdict(Counter)
+
+
+def _record(op: str, use: bool, reason: str) -> None:
+    if use and reason == OK:
+        _COUNTS[op]["kernel"] += 1
+    elif use:
+        _COUNTS[op][f"guard:{reason}"] += 1
+    else:
+        _COUNTS[op][f"backend:{reason}"] += 1
+
+
+def dispatch_counts() -> dict[str, dict[str, int]]:
+    """Snapshot of per-op dispatch decision counters."""
+    return {op: dict(c) for op, c in _COUNTS.items()}
+
+
+def reset_dispatch_counts() -> None:
+    _COUNTS.clear()
+
+
+# ----------------------------------------------------------------------
 def mv_sad(cur, prev, block: int = 16, radius: int = 4):
+    facts = contracts.mv_sad_facts(cur, prev, block=block, radius=radius)
+    contracts.validate("mv_sad", facts)
     use, interp = _use_pallas()
-    if use:
+    dec = contracts.decide("mv_sad", facts)
+    _record("mv_sad", use, dec.reason)
+    if use and dec.use_kernel:
         return mv_sad_pallas(cur, prev, block=block, radius=radius, interpret=interp)
     return ref.mv_sad_ref(cur, prev, block, radius)
 
 
 def rope_shift(k, delta, theta: float = 10_000.0):
+    facts = contracts.rope_shift_facts(k, delta)
+    contracts.validate("rope_shift", facts)
     use, interp = _use_pallas()
-    if use:
+    dec = contracts.decide("rope_shift", facts)
+    _record("rope_shift", use, dec.reason)
+    if use and dec.use_kernel:
         return rope_shift_pallas(k, delta, theta=theta, interpret=interp)
     return ref.rope_shift_ref(k, delta, theta)
 
 
 def flash_prefill(q, k, v, *, causal=True, window=None, q_offset=0):
+    facts = contracts.flash_prefill_facts(
+        q, k, v, causal=causal, window=window, q_offset=q_offset
+    )
+    contracts.validate("flash_prefill", facts)
     use, interp = _use_pallas()
-    if use and q.shape[1] % 128 == 0 and k.shape[1] % 128 == 0:
+    dec = contracts.decide("flash_prefill", facts)
+    _record("flash_prefill", use, dec.reason)
+    if use and dec.use_kernel:
         return flash_prefill_pallas(
             q, k, v, causal=causal, window=window, q_offset=q_offset,
             interpret=interp,
@@ -107,19 +161,18 @@ def flash_refresh(
     path derives one per ``WindowLayout``); otherwise — CPU, unaligned
     shapes, or no map — the q-chunked jnp oracle runs.
     """
+    facts = contracts.flash_refresh_facts(
+        q, k, v, q_pos, kv_valid, causal=causal, window=window,
+        block_map=block_map,
+        positions_match=lambda: _positions_match_map(q_pos, block_map),
+    )
+    contracts.validate("flash_refresh", facts)
     use, interp = _use_pallas()
     B, Sq = q.shape[:2]
     Sk = k.shape[1]
-    if (
-        use
-        and block_map is not None
-        and block_map.n_q == Sq
-        and block_map.kv_len == Sk
-        and Sk % block_map.tk == 0
-        and block_map.causal == causal
-        and block_map.window == window
-        and _positions_match_map(q_pos, block_map)
-    ):
+    dec = contracts.decide("flash_refresh", facts)
+    _record("flash_refresh", use, dec.reason)
+    if use and dec.use_kernel:
         bm = block_map
         pad = bm.q_pos.shape[0] - Sq
         qp = jnp.asarray(bm.q_pos)
@@ -205,17 +258,14 @@ def flash_packed(
     otherwise — CPU, unaligned bucket, no map — the q-chunked jnp
     oracle runs.
     """
-    R, L = q.shape[:2]
+    facts = contracts.flash_packed_facts(
+        q, k, v, seg_id, tile_ids, tile_count, tq=tq, tk=tk
+    )
+    contracts.validate("flash_packed", facts)
     use, interp = _use_pallas()
-    if (
-        use
-        and tile_ids is not None
-        and tile_count is not None
-        and L % tq == 0
-        and L % tk == 0
-        and tuple(tile_ids.shape[:2]) == (R, L // tq)
-        and tuple(tile_count.shape) == (R, L // tq)
-    ):
+    dec = contracts.decide("flash_packed", facts)
+    _record("flash_packed", use, dec.reason)
+    if use and dec.use_kernel:
         return flash_packed_pallas(
             q, k, v, seg_id, tile_ids, tile_count,
             tq=tq, tk=tk, interpret=interp,
@@ -274,6 +324,8 @@ def ssd_scan(x, log_a, b, c, init_state=None, chunk: int = 128):
     The time axis is padded to a chunk multiple with identity steps
     (log_a=0 keeps the state, x=b=0 adds nothing), so any L works.
     """
+    facts = contracts.ssd_scan_facts(x, log_a, b, c, chunk=chunk)
+    contracts.validate("ssd_scan", facts)
     L = x.shape[1]
     q = min(chunk, L) if L % chunk else chunk
     pad = (-L) % q
@@ -284,6 +336,7 @@ def ssd_scan(x, log_a, b, c, init_state=None, chunk: int = 128):
         c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
     use, interp = _use_pallas()
     G = b.shape[2]
+    _record("ssd_scan", use, OK)
     if use:
         y, st = ssd_scan_pallas(
             x, log_a, b, c, init_state, chunk=q, n_groups=G,

@@ -334,7 +334,6 @@ def ssd_chunked_ref(
 
 def _ssd_chunked_rest(xf, af, bf, cf, cum, y_intra, decay_end, init_state, out_dtype):
     B, nc, Q, H, P = xf.shape
-    N = bf.shape[-1]
     states = jnp.einsum("bcsh,bcshn,bcshp->bchpn", decay_end, bf, xf)
     chunk_decay = jnp.exp(cum[:, :, -1, :])            # (B, nc, H)
 

@@ -16,7 +16,6 @@ locks the device count on first initialization); do not set it globally
 — smoke tests and benches must see 1 device.
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback

@@ -6,15 +6,14 @@ per-component lowers the roofline assembly needs (see
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..configs.base import INPUT_SHAPES, ModelCfg, ShapeCfg
-from ..configs.registry import LONG_CONTEXT_WINDOW, SKIPS
+from ..configs.base import ModelCfg, ShapeCfg
+from ..configs.registry import LONG_CONTEXT_WINDOW
 from ..models import transformer as tfm
 from ..models import layers
 from ..sharding import rules as shr
@@ -165,7 +164,6 @@ def build_program(
         rules = dict(rules, embed=None)
     pshard = shr.param_shardings(specs, mesh, rules=rules, params_tree=params)
     B, S = shape.global_batch, shape.seq_len
-    chips = mesh.devices.size
 
     # ---- per-layer parts shared by all kinds --------------------------
     def layer_params_at(pos):
@@ -385,7 +383,6 @@ def build_program(
         args = (params, SDS((B, 1), jnp.int32), caches)
         in_sh = (pshard, dp2, csh)
         donate = (2,)
-        out_sh = (NamedSharding(mesh, shr.data_spec(mesh, B, 2)), csh)
 
         h1 = SDS((B, 1, cfg.d_model), jnp.bfloat16)
         parts.append((

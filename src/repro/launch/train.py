@@ -14,8 +14,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from ..configs import get_config
 from ..data.pipeline import lm_batches

@@ -11,13 +11,12 @@ lowers within HBM on the production mesh.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ModelCfg, MoECfg, SSMCfg
+from ..configs.base import ModelCfg, MoECfg
 from ..kernels import ops
 from ..kernels.ref import apply_rope_ref
 from ..sharding.ctx import constrain

@@ -14,14 +14,13 @@ Three execution paths share the block code:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelCfg
-from .init import Param, ParamBuilder, split_tree, stack_layers
+from .init import ParamBuilder, split_tree, stack_layers
 from . import layers
 from .layers import KVCache, SSMCache
 

@@ -22,15 +22,15 @@ Two pruned execution paths:
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ModelCfg, ViTCfg
+from ..configs.base import ViTCfg
 from ..kernels import ops
 from . import layers
-from .init import ParamBuilder, split_tree, stack_layers
+from .init import ParamBuilder, stack_layers
 
 F32 = jnp.float32
 

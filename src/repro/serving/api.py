@@ -46,8 +46,10 @@ from ..core import (
     WindowLayout, capacity_groups, motion_mask, pack_plan,
     refresh_block_map, reuse_caches, select_tokens,
 )
+from ..kernels import ops as kernel_ops
 from ..models import layers
 from ..models import transformer as tfm
+from . import metrics
 from ..models import vit as vitm
 from . import flops as flopcount
 
@@ -92,6 +94,12 @@ class WindowStats:
     t_prefill: float
     t_decode: float
     t_overhead: float
+    # Kernel dispatch decisions during this window's batched stage call
+    # that were NOT kernel-eligible (silent oracle fallbacks for
+    # flash_refresh / flash_packed).  Dispatch runs at trace time, so
+    # steady-state windows (no retrace) report 0; every row of one
+    # batched call shares the same value.
+    kernel_fallbacks: int = 0
 
 
 # ======================================================================
@@ -308,6 +316,7 @@ class VisualEncoder:
                 slots += Np * dec.patch_idx.shape[1]
             toks = toks.reshape((S, Np) + toks.shape[1:])
             gval = dec.group_valid.reshape(S, Np, -1)
+            # check: allow-host-sync-under-jit(per-window stats fetch; one scalar per stream, after dispatch)
             patches += np.asarray(
                 dec.patch_valid.reshape(S, -1).sum(axis=1), np.int64
             )
@@ -427,6 +436,7 @@ class AttentionPrefill:
             decode_start=lay.total_len,
             flops_len=lambda i: lay.total_len + i + 1,
             state=state, tokens_vis=lay.vis_len,
+            # check: allow-host-sync-under-jit(WindowStats needs concrete counts; stage output already awaited)
             tokens_valid=np.asarray(valid.sum(axis=1)),
             n_refreshed=n_refreshed, flops=flops, t_select=t_select,
         )
@@ -535,6 +545,7 @@ class AttentionPrefill:
                 (k_new - k_reused.astype(k_new.dtype)).astype(F32),
                 axis=(-1, -2),
             )[0]
+            # check: allow-host-sync-under-jit(cacheblend selects its scatter set online: data-dependent indices must be concrete)
             top = np.asarray(jnp.argsort(-dev)[:budget], np.int32)
             return np.unique(np.concatenate([top, tail]))
         raise ValueError(mode)
@@ -610,6 +621,7 @@ class RecurrentPrefill:
             state={"caches": caches, "offset": offset_vis,
                    "max_hist": max_hist},
             tokens_vis=n_new,
+            # check: allow-host-sync-under-jit(WindowStats needs concrete counts; stage output already awaited)
             tokens_valid=np.asarray(vval.sum(axis=1)),
             n_refreshed=n_new + lay.query_len, flops=flops, t_select=0.0,
         )
@@ -637,6 +649,7 @@ class GreedyDecoder:
         the attended context length of decode step i (family-specific).
 
         Returns (answers (S,), yes_no (S, 2), caches, flops_decode)."""
+        # check: allow-host-sync-under-jit(greedy answer decision is host control flow by design)
         yes_no = np.asarray(logits[:, (YES, NO)], np.float64)
         answers = (yes_no[:, 0] > yes_no[:, 1]).astype(np.int64)
         tok = jnp.asarray(
@@ -728,6 +741,7 @@ class ServingPipeline:
         lay = self.layout
         S = frames.shape[0]
         fresh = state is None or not self.reuse
+        disp0 = kernel_ops.dispatch_counts()
 
         # ---- ViT stage ------------------------------------------------
         t0 = time.perf_counter()
@@ -754,6 +768,9 @@ class ServingPipeline:
         )
         self.backend.absorb_decode(pr.state, caches)
         t_decode = time.perf_counter() - t0
+        n_fallback = metrics.kernel_fallback_delta(
+            disp0, kernel_ops.dispatch_counts()
+        )
 
         stats = [
             WindowStats(
@@ -769,6 +786,7 @@ class ServingPipeline:
                 flops_decode=f_decode,
                 t_codec=0.0, t_vit=t_vit / S, t_prefill=t_prefill / S,
                 t_decode=t_decode / S, t_overhead=pr.t_select / S,
+                kernel_fallbacks=n_fallback,
             )
             for i in range(S)
         ]

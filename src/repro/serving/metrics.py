@@ -6,7 +6,36 @@ videos.
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
+
+# Ops whose silent oracle fallback erases the paper's FLOP savings —
+# mirrored by the static dispatch auditor in tools/check.
+FALLBACK_OPS = ("flash_refresh", "flash_packed")
+
+
+def kernel_fallback_delta(
+    before: Dict[str, Dict[str, int]],
+    after: Dict[str, Dict[str, int]],
+    ops: Sequence[str] = FALLBACK_OPS,
+) -> int:
+    """Ineligible kernel-dispatch decisions between two
+    ``kernels.ops.dispatch_counts()`` snapshots.
+
+    Counts every decision whose eligibility reason was not ``ok`` —
+    i.e. the op ran the q-chunked oracle although a Pallas kernel
+    exists — regardless of backend, so CPU dev runs report the same
+    fallback signal a TPU deployment would.  ``kernel`` hits and
+    ``backend:ok`` (oracle purely because no TPU is attached) are not
+    fallbacks.
+    """
+    total = 0
+    for op in ops:
+        b, a = before.get(op, {}), after.get(op, {})
+        for key in a:
+            if key == "kernel" or key == "backend:ok":
+                continue
+            total += a[key] - b.get(key, 0)
+    return total
 
 
 def video_prediction(window_answers: Sequence[int], consecutive: int = 2) -> int:

@@ -104,6 +104,9 @@ class Scheduler:
         # encoder actually computed (padded capacity or packed buffer)
         self.vit_patches = 0
         self.vit_slots = 0
+        # silent kernel→oracle fallbacks observed across all batched
+        # stage calls (rows of one call share the count: add it once)
+        self.kernel_fallbacks = 0
 
     # -- session lifecycle ---------------------------------------------
     def submit(self, request: StreamRequest) -> int:
@@ -214,6 +217,7 @@ class Scheduler:
             results.append(res)
             self.vit_patches += st.vit_patches
             self.vit_slots += st.vit_slots
+        self.kernel_fallbacks += stats[0].kernel_fallbacks
         self.windows_served += len(results)
         self.t_serve += time.perf_counter() - t_poll0
         return results

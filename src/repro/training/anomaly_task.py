@@ -16,9 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..codec import encode_stream
 from ..configs.base import CodecCfg, ModelCfg, ViTCfg
-from ..core.kvc import WindowLayout
 from ..data.pipeline import anomaly_dataset
 from ..models import transformer as tfm
 from ..models import vit as vitm

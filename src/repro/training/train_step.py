@@ -1,8 +1,7 @@
 """Loss + train step, shared by the launcher, dry-run, and examples."""
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,26 @@
+"""Seeded violations: host-sync-under-jit, strict scope.
+
+Two syncs inside a jit-decorated function (np.asarray on a traced
+value, float()) plus an .item() in a same-module helper the jitted
+function calls — all three must be flagged.  The module-level asarray
+at the bottom is outside any jit scope and must NOT be flagged.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _helper(x):
+    return x.item()
+
+
+@jax.jit
+def step(x):
+    a = np.asarray(x)
+    b = float(x[0])
+    _helper(x)
+    return jnp.sum(x) + a.shape[0] + b
+
+
+CLEAN = np.asarray([1.0, 2.0])

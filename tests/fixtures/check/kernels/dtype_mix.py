@@ -1,0 +1,27 @@
+"""Seeded violations: dtype-promotion (kernel-adjacent path).
+
+``mix`` adds a float32 cast to a bfloat16 cast in one expression
+(implicit promotion); ``accum`` feeds a bfloat16-cast operand to
+einsum without preferred_element_type (silent low-precision
+accumulation).  ``accum_ok`` pins the accumulator and must NOT be
+flagged.
+"""
+
+import jax.numpy as jnp
+
+
+def mix(a, b):
+    return a.astype(jnp.float32) + b.astype(jnp.bfloat16)
+
+
+def accum(a, b):
+    return jnp.einsum("bij,bjk->bik", a.astype(jnp.bfloat16), b)
+
+
+def accum_ok(a, b):
+    return jnp.einsum(
+        "bij,bjk->bik",
+        a.astype(jnp.bfloat16),
+        b,
+        preferred_element_type=jnp.float32,
+    )

@@ -1,0 +1,17 @@
+"""Seeded violation: recompile-hazard (b) — jitted callable closing
+over a mutable container literal from the enclosing function.  The
+list is traced once as a constant; later mutation is silently ignored.
+"""
+
+import jax
+
+
+def outer(x):
+    table = [1.0, 2.0, 3.0]
+
+    @jax.jit
+    def inner(y):
+        return y + table[0]
+
+    table.append(4.0)
+    return inner(x)

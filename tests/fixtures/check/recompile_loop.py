@@ -1,0 +1,24 @@
+"""Seeded violation: recompile-hazard (a) — jax.jit inside a loop.
+
+Every iteration builds a fresh callable with an empty compile cache.
+The module-level jit below the loop is the correct pattern and must
+NOT be flagged.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def _body(x):
+    return x * 2.0
+
+
+def run(xs):
+    total = 0.0
+    for x in xs:
+        f = jax.jit(_body)
+        total += f(x)
+    return total
+
+
+good = jax.jit(lambda x: jnp.sin(x))

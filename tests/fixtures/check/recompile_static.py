@@ -1,0 +1,29 @@
+"""Seeded violations: recompile-hazard (c) — raw dynamic ints fed to a
+static argument of a module-local jitted function (one compile per
+distinct value).  ``bucketed`` routes the value through a bucket table
+first and must NOT be flagged.
+"""
+
+from functools import partial
+
+import jax
+
+BUCKETS = (128, 256, 512)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def padded(x, n):
+    return x[:n]
+
+
+def caller_shape(x):
+    return padded(x, n=x.shape[0])
+
+
+def caller_len(x, items):
+    return padded(x, n=len(items))
+
+
+def bucketed(x):
+    n = min(b for b in BUCKETS if b >= x.shape[0])
+    return padded(x, n=n)

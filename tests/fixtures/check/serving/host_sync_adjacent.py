@@ -1,0 +1,28 @@
+"""Seeded violation: host-sync-under-jit, dispatch-adjacent scope.
+
+``run`` is not jitted itself but invokes the jitted ``self._jit_step``,
+so it sits on the async dispatch path; the np.asarray fetch there
+blocks the queue and must be flagged.  ``float()`` is allowed in
+adjacent scopes, so ``tail`` must NOT be flagged.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _step(x):
+    return jnp.cumsum(x)
+
+
+class Stage:
+    def __init__(self):
+        self._jit_step = jax.jit(_step)
+
+    def run(self, x):
+        out = self._jit_step(x)
+        return np.asarray(out)
+
+    def tail(self, x):
+        out = self._jit_step(x)
+        return float(1.0) + out[0]

@@ -1,0 +1,11 @@
+"""A real violation suppressed by a checked waiver: lints must report
+nothing for this file (the waiver is used, so it is not stale)."""
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def step(x):
+    # check: allow-host-sync-under-jit(fixture: intentional, waived)
+    return np.asarray(x)

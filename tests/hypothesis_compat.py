@@ -11,7 +11,9 @@ same module still run.
 import pytest
 
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import (  # noqa: F401 (re-exported to test modules)
+        given, settings, strategies as st,
+    )
     HAVE_HYPOTHESIS = True
 except ImportError:  # pragma: no cover - exercised only without the extra
     HAVE_HYPOTHESIS = False

@@ -1,9 +1,8 @@
 """Roofline analysis unit tests (parser already covered in
 test_sharding; here: report math + assembly)."""
-import numpy as np
 
 from repro.analysis.hlo import _shape_table, collective_bytes
-from repro.analysis.roofline import PartCost, Report, assemble, HBM_BW, LINK_BW, PEAK_FLOPS
+from repro.analysis.roofline import PartCost, Report, assemble
 
 
 def test_report_terms_and_dominance():

@@ -1,0 +1,183 @@
+"""Tests for the tools.check static analyzer.
+
+Two halves: (1) every seeded fixture violation under
+``tests/fixtures/check/`` is flagged (and the deliberately-clean
+constructs in the same files are not); (2) the real tree lints clean
+and both audits pass — the same bar the CI static-analysis job gates
+on.
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+for p in (ROOT, ROOT / "src"):
+    if str(p) not in sys.path:
+        sys.path.insert(0, str(p))
+
+from tools.check import lints  # noqa: E402
+from tools.check.lints import (  # noqa: E402
+    RULE_DTYPE,
+    RULE_HOST_SYNC,
+    RULE_RECOMPILE,
+    RULE_STALE,
+)
+
+FIXTURES = ROOT / "tests" / "fixtures" / "check"
+
+
+def _lint(rel: str):
+    path = FIXTURES / rel
+    return lints.lint_source(path.read_text(), str(path))
+
+
+# ----------------------------------------------------------------------
+# seeded fixtures: one per rule
+# ----------------------------------------------------------------------
+def test_host_sync_strict_fixture():
+    fs = _lint("host_sync_strict.py")
+    assert [f.rule for f in fs] == [RULE_HOST_SYNC] * 3
+    msgs = " | ".join(f.message for f in fs)
+    assert "np.asarray" in msgs
+    assert "float()" in msgs
+    assert ".item()" in msgs and "'_helper'" in msgs  # strict via callee
+    # the module-level asarray (outside any jit scope) is not flagged
+    src = (FIXTURES / "host_sync_strict.py").read_text()
+    clean_line = next(
+        i for i, l in enumerate(src.splitlines(), 1) if "CLEAN" in l
+    )
+    assert all(f.line != clean_line for f in fs)
+
+
+def test_host_sync_adjacent_fixture():
+    fs = _lint("serving/host_sync_adjacent.py")
+    assert len(fs) == 1 and fs[0].rule == RULE_HOST_SYNC
+    assert "dispatch path" in fs[0].message and "'run'" in fs[0].message
+    # float() is permitted in adjacent (non-strict) scopes: 'tail' clean
+
+
+def test_host_sync_adjacent_needs_serving_path():
+    # same source outside a serving/ path: the adjacent rule stays off
+    src = (FIXTURES / "serving" / "host_sync_adjacent.py").read_text()
+    assert lints.lint_source(src, "tests/fixtures/check/elsewhere.py") == []
+
+
+def test_recompile_loop_fixture():
+    fs = _lint("recompile_loop.py")
+    assert [f.rule for f in fs] == [RULE_RECOMPILE]
+    assert "inside a loop" in fs[0].message
+
+
+def test_recompile_closure_fixture():
+    fs = _lint("recompile_closure.py")
+    assert [f.rule for f in fs] == [RULE_RECOMPILE]
+    assert "mutable container 'table'" in fs[0].message
+
+
+def test_recompile_static_fixture():
+    fs = _lint("recompile_static.py")
+    assert [f.rule for f in fs] == [RULE_RECOMPILE] * 2
+    assert all("static argument 'n'" in f.message for f in fs)
+    # the bucketed caller routes through a bucket table: not flagged
+    src = (FIXTURES / "recompile_static.py").read_text()
+    bucketed_line = next(
+        i for i, l in enumerate(src.splitlines(), 1)
+        if "padded(x, n=n)" in l
+    )
+    assert all(f.line != bucketed_line for f in fs)
+
+
+def test_dtype_fixture():
+    fs = _lint("kernels/dtype_mix.py")
+    assert [f.rule for f in fs] == [RULE_DTYPE] * 2
+    msgs = " | ".join(f.message for f in fs)
+    assert "mixes explicit float32 and bfloat16" in msgs
+    assert "preferred_element_type" in msgs
+    # accum_ok (pinned accumulator) contributes nothing: only 2 findings
+
+
+def test_dtype_needs_kernel_path():
+    src = (FIXTURES / "kernels" / "dtype_mix.py").read_text()
+    assert lints.lint_source(src, "tests/fixtures/check/elsewhere.py") == []
+
+
+def test_waiver_suppresses_finding():
+    assert _lint("waived_ok.py") == []
+
+
+def test_stale_waiver_reported():
+    fs = _lint("stale_waiver.py")
+    assert [f.rule for f in fs] == [RULE_STALE]
+    assert "suppresses nothing" in fs[0].message
+    assert "left over after a refactor" in fs[0].message
+
+
+# ----------------------------------------------------------------------
+# the real tree: the bar CI gates on
+# ----------------------------------------------------------------------
+def test_repo_lints_clean():
+    findings = lints.lint_paths(
+        [str(ROOT / "src"), str(ROOT / "benchmarks")]
+    )
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_dispatch_audit_no_silent_fallbacks():
+    from tools.check import dispatch_audit
+
+    rows, failures = dispatch_audit.run_audit()
+    assert failures == [], "\n".join(failures)
+    # every geometry the registry promises to the kernel actually
+    # dispatched to it (no silent oracle fallback)
+    for r in rows:
+        if r.expect == "kernel":
+            assert r.observed == "kernel", (r.op, r.geometry, r.observed)
+    table = dispatch_audit.coverage_table(rows)
+    assert "| kernel | geometry |" in table
+
+
+def test_recompile_audit_within_budget():
+    from tools.check import recompile_audit
+
+    results, failures = recompile_audit.run_audit()
+    assert failures == [], "\n".join(failures)
+    by_op = {r.op: r for r in results}
+    assert by_op["flash_packed"].distinct_keys <= by_op["flash_packed"].budget
+    assert by_op["flash_refresh"].distinct_keys <= 20  # one per (layout, fleet)
+
+
+# ----------------------------------------------------------------------
+# CLI exit codes (what the CI job actually invokes)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "paths,expect_rc",
+    [
+        (["src", "benchmarks"], 0),
+        (["tests/fixtures/check"], 1),
+    ],
+)
+def test_cli_exit_codes(paths, expect_rc, tmp_path):
+    import os
+
+    env = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+    summary = tmp_path / "summary.md"
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "tools.check", *paths,
+            "--no-audit", "--summary", str(summary),
+        ],
+        cwd=ROOT,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+    assert proc.returncode == expect_rc, proc.stdout + proc.stderr
+    assert summary.exists()
+    if expect_rc == 0:
+        assert "clean" in proc.stdout
+    else:
+        assert "FAILED" in proc.stdout

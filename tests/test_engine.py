@@ -1,11 +1,10 @@
 """Serving engine end-to-end: all modes run, resource ordering matches
 the paper's mechanism, streaming-family engine works."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import CodecCfg, ModelCfg, MoECfg, SSMCfg, ViTCfg
+from repro.configs.base import CodecCfg, ModelCfg, SSMCfg, ViTCfg
 from repro.data.video import VideoSpec, generate_video
 from repro.models import transformer as tfm
 from repro.models import vit as vitm

@@ -458,3 +458,126 @@ def test_ssd_identity_padding_property(seed):
     pad = lambda a: jnp.pad(a, ((0, 0), (0, 4)) + ((0, 0),) * (a.ndim - 2))
     _, s2 = ref.ssd_scan_ref(pad(x), pad(la), pad(b), pad(c))
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# contract guards (registry-driven dispatch preconditions / eligibility)
+# ----------------------------------------------------------------------
+from repro.kernels.contracts import KernelContractError  # noqa: E402
+
+
+def _guard_counts(op):
+    return ops.dispatch_counts().get(op, {})
+
+
+def test_mv_sad_guard_rejects_bad_geometry():
+    good = jnp.zeros((64, 64))
+    with pytest.raises(KernelContractError, match="block-divisibility"):
+        ops.mv_sad(jnp.zeros((60, 64)), jnp.zeros((60, 64)))
+    with pytest.raises(KernelContractError, match="shape-match"):
+        ops.mv_sad(good, jnp.zeros((64, 32)))
+    with pytest.raises(KernelContractError, match="rank"):
+        ops.mv_sad(jnp.zeros((1, 64, 64)), jnp.zeros((1, 64, 64)))
+    with pytest.raises(KernelContractError, match="radius"):
+        ops.mv_sad(good, good, radius=0)
+    # raised identically on both backends: the contract is the contract
+    with ops.kernel_mode("interpret"):
+        with pytest.raises(KernelContractError, match="block-divisibility"):
+            ops.mv_sad(jnp.zeros((60, 64)), jnp.zeros((60, 64)))
+
+
+def test_rope_shift_guard_rejects_bad_geometry():
+    k = jnp.zeros((1, 128, 2, 32))
+    d = jnp.zeros((1, 128), jnp.int32)
+    with pytest.raises(KernelContractError, match="delta-dtype"):
+        ops.rope_shift(k, d.astype(jnp.float32))
+    with pytest.raises(KernelContractError, match="delta-shape"):
+        ops.rope_shift(k, jnp.zeros((1, 64), jnp.int32))
+    with pytest.raises(KernelContractError, match="even-head"):
+        ops.rope_shift(jnp.zeros((1, 128, 2, 31)), d)
+    with pytest.raises(KernelContractError, match="k-dtype"):
+        ops.rope_shift(k.astype(jnp.int32), d)
+
+
+def test_rope_shift_unaligned_seq_falls_back_cleanly():
+    """S=192 is not a 128 multiple: formerly a kernel-side assert crash,
+    now a counted eligibility fallback that still returns oracle output."""
+    kk = jax.random.normal(jax.random.PRNGKey(7), (1, 192, 2, 32))
+    d = jax.random.randint(jax.random.PRNGKey(8), (1, 192), -100, 100)
+    before = _guard_counts("rope_shift").get("guard:seq-tile", 0)
+    with ops.kernel_mode("interpret"):
+        out = ops.rope_shift(kk, d)
+    assert _guard_counts("rope_shift").get("guard:seq-tile", 0) == before + 1
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.rope_shift_ref(kk, d)), atol=1e-5
+    )
+
+
+def test_flash_prefill_guard_rejects_bad_geometry():
+    q = jnp.zeros((1, 128, 4, 32))
+    k = jnp.zeros((1, 128, 2, 32))
+    with pytest.raises(KernelContractError, match="batch"):
+        ops.flash_prefill(q, jnp.zeros((2, 128, 2, 32)), jnp.zeros((2, 128, 2, 32)))
+    with pytest.raises(KernelContractError, match="gqa"):
+        ops.flash_prefill(jnp.zeros((1, 128, 3, 32)), k, k)
+    with pytest.raises(KernelContractError, match="head-dim"):
+        ops.flash_prefill(jnp.zeros((1, 128, 4, 64)), k, k)
+    with pytest.raises(KernelContractError, match="dtype"):
+        ops.flash_prefill(q, k.astype(jnp.int32), k.astype(jnp.int32))
+    with pytest.raises(KernelContractError, match="window"):
+        ops.flash_prefill(q, k, k, window=0)
+
+
+def test_flash_prefill_unaligned_tile_falls_back_cleanly():
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (1, 192, 4, 32))
+    k = jax.random.normal(ks[1], (1, 256, 2, 32))
+    v = jax.random.normal(ks[2], (1, 256, 2, 32))
+    before = _guard_counts("flash_prefill").get("guard:q-tile", 0)
+    with ops.kernel_mode("interpret"):
+        out = ops.flash_prefill(q, k, v, q_offset=64)
+    assert _guard_counts("flash_prefill").get("guard:q-tile", 0) == before + 1
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(ref.flash_prefill_ref(q, k, v, q_offset=64)),
+        atol=1e-5,
+    )
+
+
+def test_ssd_scan_guard_rejects_bad_geometry():
+    B, L, H, P, G, N = 1, 16, 4, 8, 2, 8
+    x = jnp.zeros((B, L, H, P))
+    la = jnp.zeros((B, L, H))
+    b = jnp.zeros((B, L, G, N))
+    with pytest.raises(KernelContractError, match="log-a-shape"):
+        ops.ssd_scan(x, jnp.zeros((B, L, H + 1)), b, b)
+    with pytest.raises(KernelContractError, match="bc-shape"):
+        ops.ssd_scan(x, la, b, jnp.zeros((B, L, G, N + 1)))
+    with pytest.raises(KernelContractError, match="gqa"):
+        ops.ssd_scan(x, la, jnp.zeros((B, L, 3, N)), jnp.zeros((B, L, 3, N)))
+    with pytest.raises(KernelContractError, match="chunk"):
+        ops.ssd_scan(x, la, b, b, chunk=0)
+    with pytest.raises(KernelContractError, match="dtype"):
+        ops.ssd_scan(x.astype(jnp.int32), la, b, b)
+
+
+def test_guarded_ops_oracle_parity_smoke():
+    """Aligned geometries pass validate() and the ops wrapper's kernel
+    path (interpret mode) matches its oracle — end-to-end through the
+    contract-driven dispatch."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+    cur = jax.random.uniform(k1, (32, 32)) * 255
+    prev = jnp.roll(cur, (1, 1), (0, 1))
+    with ops.kernel_mode("interpret"):
+        mv_k, sad_k = ops.mv_sad(cur, prev, block=8, radius=2)
+    mv_r, sad_r = ref.mv_sad_ref(cur, prev, 8, 2)
+    np.testing.assert_array_equal(np.asarray(mv_k), np.asarray(mv_r))
+    np.testing.assert_allclose(np.asarray(sad_k), np.asarray(sad_r), rtol=1e-5)
+
+    kk = jax.random.normal(k2, (1, 128, 2, 32))
+    d = jnp.full((1, 128), 17, jnp.int32)
+    with ops.kernel_mode("interpret"):
+        out = ops.rope_shift(kk, d)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.rope_shift_ref(kk, d)), atol=1e-5
+    )

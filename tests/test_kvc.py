@@ -1,6 +1,5 @@
 """Selective KVC reuse/refresh (paper §3.4): exactness and approximation
 ordering properties."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

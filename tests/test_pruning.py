@@ -1,7 +1,6 @@
 """Motion Analyzer + Token Pruner properties (paper Eq. 3-4, §3.3.2)."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis_compat import given, settings, st  # optional dev dep
 
 from repro.codec import encode_stream

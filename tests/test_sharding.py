@@ -3,7 +3,6 @@ and a jit'd train step under a real (1x1) mesh with shardings."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config

@@ -7,8 +7,6 @@ selective-KVC LLM serving -> video-level decisions, compared across
 system variants on identical inputs.
 """
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs.base import CodecCfg, ModelCfg, ViTCfg

@@ -1,0 +1,2 @@
+"""Repo tooling (static analysis, CI helpers). Not part of the
+``repro`` package — run as ``python -m tools.check``."""

@@ -1,0 +1,14 @@
+"""Kernel-contract + tracing-hygiene static analyzer.
+
+Usage: ``python -m tools.check src benchmarks`` (see cli.py).
+"""
+from .lints import (  # noqa: F401
+    ALL_RULES,
+    RULE_DTYPE,
+    RULE_HOST_SYNC,
+    RULE_RECOMPILE,
+    RULE_STALE,
+    Finding,
+    lint_paths,
+    lint_source,
+)

@@ -1,0 +1,110 @@
+"""Command-line driver: ``python -m tools.check [paths...]``.
+
+Runs, in order:
+  1. the AST tracing-hygiene lints over the given paths (default:
+     ``src benchmarks``),
+  2. the abstract-eval dispatch auditor (kernel-vs-oracle coverage),
+  3. the recompile-budget auditor (bucket-scheme compile-key counts).
+
+Exit code 0 iff no lint finding and no audit failure.  ``--summary``
+writes the dispatch coverage table (plus budget lines) as markdown —
+CI appends it to the step summary and uploads it as an artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from . import lints
+
+DEFAULT_PATHS = ("src", "benchmarks")
+
+
+def _ensure_repro_importable() -> None:
+    try:
+        import repro  # noqa: F401
+    except ImportError:
+        root = Path(__file__).resolve().parents[2]
+        sys.path.insert(0, str(root / "src"))
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tools.check",
+        description="kernel-contract + tracing-hygiene static analyzer",
+    )
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS))
+    ap.add_argument(
+        "--no-audit", action="store_true",
+        help="lint only (skip dispatch + recompile audits)",
+    )
+    ap.add_argument(
+        "--lint-only", dest="no_audit", action="store_true",
+        help=argparse.SUPPRESS,
+    )
+    ap.add_argument(
+        "--summary", metavar="FILE",
+        help="write the dispatch coverage table (markdown) here",
+    )
+    ap.add_argument(
+        "--json", metavar="FILE", help="write findings + audit rows as JSON"
+    )
+    args = ap.parse_args(argv)
+
+    findings = lints.lint_paths(args.paths)
+    for f in findings:
+        print(f.render())
+    print(
+        f"lints: {len(findings)} finding(s) over "
+        f"{', '.join(args.paths)}"
+    )
+
+    audit_rows: List = []
+    budget_results: List = []
+    audit_failures: List[str] = []
+    table = ""
+    if not args.no_audit:
+        _ensure_repro_importable()
+        from . import dispatch_audit, recompile_audit
+
+        audit_rows, disp_fail = dispatch_audit.run_audit()
+        budget_results, budget_fail = recompile_audit.run_audit()
+        audit_failures = disp_fail + budget_fail
+        table = dispatch_audit.coverage_table(audit_rows)
+        print()
+        print(table)
+        for r in budget_results:
+            print(r.render())
+        for fail in audit_failures:
+            print(f"AUDIT FAILURE: {fail}")
+
+    if args.summary:
+        md = ["## Kernel dispatch coverage", "", table, ""]
+        md += ["## Recompile budgets", ""]
+        md += [f"- {r.render()}" for r in budget_results]
+        md += ["", f"## Lints: {len(findings)} finding(s)", ""]
+        md += [f"- `{f.render()}`" for f in findings]
+        Path(args.summary).write_text("\n".join(md) + "\n")
+    if args.json:
+        payload = {
+            "findings": [f.__dict__ for f in findings],
+            "dispatch": [r.__dict__ for r in audit_rows],
+            "budgets": [
+                {
+                    "op": r.op,
+                    "scenarios": r.scenarios,
+                    "distinct_keys": r.distinct_keys,
+                    "budget": r.budget,
+                }
+                for r in budget_results
+            ],
+        }
+        Path(args.json).write_text(json.dumps(payload, indent=2, default=str))
+
+    ok = not findings and not audit_failures
+    print("tools.check:", "clean" if ok else "FAILED")
+    return 0 if ok else 1

@@ -1,0 +1,350 @@
+"""Abstract-eval dispatch auditor.
+
+Sweeps the CI geometry matrix — the window layouts, cache roundings and
+pack plans the serving path actually produces — through the contract
+registry AND through ``jax.eval_shape`` of the real ``kernels.ops``
+dispatchers (in interpret mode, so the Pallas kernel path is traced
+abstractly without a TPU).  For every geometry it records
+
+  * the registry's verdict (``contracts.decide``),
+  * the path ``ops`` actually took (from ``ops.dispatch_counts()``),
+  * whether abstract evaluation traced cleanly with the right shape.
+
+A geometry whose source says it must hit the kernel (every serving
+refresh/packed geometry — the whole point of KV_TILE rounding and the
+pack buckets) but that resolves to the oracle is a *silent fallback*
+and fails the audit.  Rows with ``expect='oracle:<rule>'`` assert the
+guard refuses exactly as documented; observed-only rows (``expect
+None``) just populate the coverage table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ViTCfg
+from repro.core.kvc import WindowLayout, refresh_block_map
+from repro.core.pruning import PACK_LEN_BUCKETS, PruneDecision, pack_plan
+from repro.kernels import contracts, ops
+
+BF16 = "bfloat16"
+F32 = "float32"
+KV_TILE = 128  # mirrors serving.api.AttentionPrefill.KV_TILE
+MAX_NEW_TOKENS = 16
+
+
+def _sds(shape: Tuple[int, ...], dtype: str) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, np.dtype(dtype))
+
+
+@dataclasses.dataclass
+class AuditRow:
+    op: str
+    geometry: str
+    expect: Optional[str]  # "kernel" | "oracle:<rule>" | None (observed)
+    decision: str  # registry verdict: "kernel" | "oracle:<rule>"
+    observed: str  # ops path under eval_shape
+    trace: str  # "ok" | error string
+
+    @property
+    def failure(self) -> Optional[str]:
+        if self.trace != "ok":
+            return f"abstract eval failed: {self.trace}"
+        if self.decision != self.observed:
+            return (
+                f"registry says {self.decision} but ops dispatched "
+                f"{self.observed}"
+            )
+        if self.expect is not None and self.decision != self.expect:
+            return f"expected {self.expect}, registry resolved {self.decision}"
+        return None
+
+
+def _decision_str(dec: contracts.DispatchDecision) -> str:
+    return "kernel" if dec.use_kernel else f"oracle:{dec.reason}"
+
+
+def _observed_str(before, after) -> str:
+    """The single dispatch outcome recorded between two snapshots."""
+    outcomes = []
+    for op, counts in after.items():
+        for key, n in counts.items():
+            if n - before.get(op, {}).get(key, 0) > 0:
+                outcomes.append(key)
+    if not outcomes:
+        return "none"
+    key = outcomes[0]
+    if key == "kernel":
+        return "kernel"
+    return "oracle:" + key.split(":", 1)[1]
+
+
+def _run_one(
+    op: str,
+    geometry: str,
+    expect: Optional[str],
+    facts: dict,
+    fn: Callable,
+    args: Sequence[Any],
+    out_shape: Tuple[int, ...],
+) -> AuditRow:
+    decision = _decision_str(contracts.decide(op, facts))
+    before = ops.dispatch_counts()
+    try:
+        with ops.kernel_mode("interpret"):
+            res = jax.eval_shape(fn, *args)
+        got = res[0].shape if isinstance(res, tuple) else res.shape
+        trace = (
+            "ok"
+            if tuple(got) == tuple(out_shape)
+            else f"shape {tuple(got)} != expected {tuple(out_shape)}"
+        )
+    except Exception as e:  # noqa: BLE001 - any trace error is a finding
+        trace = f"{type(e).__name__}: {e}"
+    observed = _observed_str(before, ops.dispatch_counts())
+    return AuditRow(op, geometry, expect, decision, observed, trace)
+
+
+# ----------------------------------------------------------------------
+# geometry matrix (mirrors the CI test/bench configurations)
+# ----------------------------------------------------------------------
+LAYOUTS: Tuple[Tuple[WindowLayout, Optional[int]], ...] = tuple(
+    (WindowLayout(window=w, stride=s, gop=g, g_tokens=gt, k_tokens=kt,
+                  query_len=q), sw)
+    for (w, s, g, gt, kt, q, sw) in (
+        (16, 4, 4, 256, 128, 16, None),
+        (16, 8, 8, 256, 128, 16, None),
+        (8, 4, 4, 64, 32, 32, None),
+        (16, 4, 4, 256, 128, 16, 4096),
+        (32, 8, 8, 144, 96, 16, None),
+    )
+)
+
+ATTN = dict(H=8, Hkv=4, D=64)
+
+
+def _refresh_rows(batches: Sequence[int] = (1, 4)) -> List[AuditRow]:
+    """Every serving refresh geometry must be kernel-eligible: that is
+    the invariant the KV_TILE cache rounding exists to uphold."""
+    rows = []
+    H, Hkv, D = ATTN["H"], ATTN["Hkv"], ATTN["D"]
+    for lay, sw in LAYOUTS:
+        need = lay.total_len + MAX_NEW_TOKENS
+        slots = -(-need // KV_TILE) * KV_TILE
+        bm = refresh_block_map(lay, window=sw, kv_len=slots)
+        for B in batches:
+            q = _sds((B, bm.n_q, H, D), BF16)
+            k = _sds((B, slots, Hkv, D), BF16)
+            v = _sds((B, slots, Hkv, D), BF16)
+            q_pos = _sds((B, bm.n_q), "int32")
+            facts = contracts.flash_refresh_facts(
+                q, k, v, q_pos, None, causal=True, window=sw,
+                block_map=bm, positions_match=lambda: True,
+            )
+            fn = functools.partial(
+                ops.flash_refresh, causal=True, window=sw, block_map=bm
+            )
+            rows.append(
+                _run_one(
+                    "flash_refresh",
+                    f"w{lay.window}s{lay.stride}g{lay.gop} "
+                    f"n_q={bm.n_q} kv={slots} sw={sw} B={B}",
+                    "kernel",
+                    facts,
+                    lambda q, k, v, p, _fn=fn: _fn(q, k, v, p),
+                    (q, k, v, q_pos),
+                    (B, bm.n_q, H, D),
+                )
+            )
+    return rows
+
+
+def _synthetic_decision(
+    v: ViTCfg, n_frames: int, k_groups: int, fill: float, seed: int
+) -> PruneDecision:
+    """Host-side PruneDecision with ``fill`` of the capacity kept."""
+    rng = np.random.default_rng(seed)
+    g2 = v.group * v.group
+    gi = np.zeros((n_frames, k_groups), np.int32)
+    gv = np.zeros((n_frames, k_groups), bool)
+    for t in range(n_frames):
+        kept = max(1, int(round(fill * k_groups)))
+        sel = rng.choice(v.n_groups, size=k_groups, replace=False)
+        gi[t] = np.sort(sel)
+        gv[t, :kept] = True
+    pi = np.repeat(gi, g2, axis=1) * g2 + np.tile(
+        np.arange(g2, dtype=np.int32), (n_frames, k_groups)
+    )
+    pv = np.repeat(gv, g2, axis=1)
+    gd = np.zeros((n_frames, v.n_groups), bool)
+    return PruneDecision(
+        group_idx=gi, group_valid=gv, patch_idx=pi,
+        patch_valid=pv, group_dynamic=gd,
+    )
+
+
+PACK_SCENARIOS: Tuple[Tuple[int, int, float], ...] = (
+    # (p-frames in the fused batch, k_groups capacity, kept fill)
+    (12, 128, 0.10),
+    (12, 128, 0.50),
+    (12, 128, 1.00),
+    (24, 128, 0.30),
+    (48, 64, 0.75),
+    (6, 32, 0.20),
+)
+
+
+def _packed_rows() -> List[AuditRow]:
+    """Every pack_plan bucket geometry must be kernel-eligible — the
+    buckets are tile multiples by construction."""
+    rows = []
+    v = ViTCfg()
+    H, D = 8, 64
+    for i, (nf, kg, fill) in enumerate(PACK_SCENARIOS):
+        dec = _synthetic_decision(v, nf, kg, fill, seed=100 + i)
+        plan = pack_plan(dec, v, tile=128)
+        bm = plan.block_map
+        R, L = plan.seg_id.shape
+        q = _sds((R, L, H, D), BF16)
+        kv = _sds((R, L, H, D), BF16)
+        seg = _sds((R, L), "int32")
+        facts = contracts.flash_packed_facts(
+            q, kv, kv, seg, bm.tile_ids, bm.tile_count, tq=bm.tq, tk=bm.tk
+        )
+        fn = functools.partial(ops.flash_packed, tq=bm.tq, tk=bm.tk)
+        rows.append(
+            _run_one(
+                "flash_packed",
+                f"frames={nf} kg={kg} fill={fill:.2f} rows={R} L={L}",
+                "kernel",
+                facts,
+                lambda q, k, v_, s, ti, tc, _fn=fn: _fn(q, k, v_, s, ti, tc),
+                (q, kv, kv, seg, bm.tile_ids, bm.tile_count),
+                (R, L, H, D),
+            )
+        )
+        assert L in PACK_LEN_BUCKETS, (L, PACK_LEN_BUCKETS)
+    return rows
+
+
+def _prefill_rows() -> List[AuditRow]:
+    rows = []
+    H, Hkv, D = ATTN["H"], ATTN["Hkv"], ATTN["D"]
+    cases = (
+        (2, 256, 256, None, "kernel"),
+        (1, 512, 512, 4096, "kernel"),
+        (1, 128, 384, None, "kernel"),
+        (1, 192, 256, None, "oracle:q-tile"),  # unaligned: guard refuses
+        (1, 256, 200, None, "oracle:k-tile"),
+    )
+    for B, Sq, Sk, sw, expect in cases:
+        q = _sds((B, Sq, H, D), F32)
+        k = _sds((B, Sk, Hkv, D), F32)
+        facts = contracts.flash_prefill_facts(
+            q, k, k, causal=True, window=sw, q_offset=0
+        )
+        fn = functools.partial(ops.flash_prefill, causal=True, window=sw)
+        rows.append(
+            _run_one(
+                "flash_prefill",
+                f"B={B} Sq={Sq} Sk={Sk} sw={sw}",
+                expect,
+                facts,
+                lambda q, k, v, _fn=fn: _fn(q, k, v),
+                (q, k, k),
+                (B, Sq, H, D),
+            )
+        )
+    return rows
+
+
+def _slab_rows() -> List[AuditRow]:
+    """rope_shift over the layouts' overlap slabs + mv_sad / ssd_scan
+    coverage.  Observed-only for rope_shift (slab alignment is layout
+    arithmetic, not an invariant the cache rounding enforces)."""
+    rows = []
+    for lay, _ in LAYOUTS:
+        S = lay.overlap_tokens
+        if S == 0:
+            continue
+        k = _sds((1, S, 4, 64), BF16)
+        delta = _sds((1, S), "int32")
+        facts = contracts.rope_shift_facts(k, delta)
+        rows.append(
+            _run_one(
+                "rope_shift",
+                f"w{lay.window}s{lay.stride} overlap={S}",
+                None,
+                facts,
+                lambda k, d: ops.rope_shift(k, d),
+                (k, delta),
+                (1, S, 4, 64),
+            )
+        )
+    cur = _sds((256, 256), F32)
+    rows.append(
+        _run_one(
+            "mv_sad",
+            "256x256 b16 r4",
+            "kernel",
+            contracts.mv_sad_facts(cur, cur, block=16, radius=4),
+            lambda a, b: ops.mv_sad(a, b, 16, 4),
+            (cur, cur),
+            (16, 16, 2),
+        )
+    )
+    x = _sds((2, 100, 8, 64), F32)
+    la = _sds((2, 100, 8), F32)
+    bc = _sds((2, 100, 2, 32), F32)
+    rows.append(
+        _run_one(
+            "ssd_scan",
+            "B2 L100 H8 G2 (padded to chunk)",
+            "kernel",
+            contracts.ssd_scan_facts(x, la, bc, bc, chunk=128),
+            lambda x, a, b, c: ops.ssd_scan(x, a, b, c)[0],
+            (x, la, bc, bc),
+            (2, 100, 8, 64),
+        )
+    )
+    return rows
+
+
+# ----------------------------------------------------------------------
+def run_audit() -> Tuple[List[AuditRow], List[str]]:
+    """Returns (all rows, failure strings)."""
+    rows = (
+        _refresh_rows() + _packed_rows() + _prefill_rows() + _slab_rows()
+    )
+    failures = [
+        f"{r.op} [{r.geometry}]: {r.failure}" for r in rows if r.failure
+    ]
+    return rows, failures
+
+
+def coverage_table(rows: Sequence[AuditRow]) -> str:
+    """Markdown kernel-vs-silent-oracle-fallback coverage table."""
+    lines = [
+        "| kernel | geometry | expected | registry | dispatched | trace |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r.op} | {r.geometry} | {r.expect or '—'} | "
+            f"{r.decision} | {r.observed} | "
+            f"{'ok' if r.trace == 'ok' else 'FAIL'} |"
+        )
+    n_fallback = sum(
+        1 for r in rows if r.expect == "kernel" and r.decision != "kernel"
+    )
+    lines.append("")
+    lines.append(
+        f"{len(rows)} geometries audited; "
+        f"{n_fallback} unexpected silent oracle fallback(s)."
+    )
+    return "\n".join(lines)

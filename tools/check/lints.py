@@ -1,0 +1,628 @@
+"""AST tracing-hygiene lints.
+
+Three rules, each protecting an invariant the serving fast path relies
+on (see ``docs/static_analysis.md``):
+
+``host-sync-under-jit``
+    ``jax.device_get`` / ``np.asarray`` / ``.item()`` / ``float()`` on
+    values reachable from jit-traced code.  Enforced *strictly* inside
+    functions that are jit-wrapped (decorator, ``jax.jit(fn)``,
+    ``jax.jit(lambda ...)``) and their same-module callees; enforced in
+    *dispatch-adjacent* form (device fetches only, ``float()``/``int()``
+    allowed) in serving-path functions that invoke a jitted callable —
+    a fetch there blocks the async dispatch queue.
+
+``recompile-hazard``
+    (a) ``jax.jit`` called inside a loop (a fresh compile cache per
+    iteration); (b) a jitted callable closing over a mutable container
+    literal from an enclosing function (traced once as a constant, then
+    silently stale); (c) a raw ``len(...)``/``.shape[...]`` expression
+    fed to a static argument of a module-local jitted function (one
+    compile per distinct value — values must go through a bucket such
+    as ``PACK_LEN_BUCKETS`` first).
+
+``dtype-promotion``
+    In kernel-adjacent code (``kernels/``, ``models/``): (a) arithmetic
+    mixing two different explicit float casts in one expression
+    (implicit f32<->bf16 promotion); (b) matmul-like calls with a
+    bf16/f16-cast operand and no ``preferred_element_type`` (silent
+    low-precision accumulation).
+
+Waivers: ``# check: allow-<rule>(<reason>)`` on the offending line or
+the line above suppresses one rule there.  Waivers are *checked* —
+one that suppresses nothing is itself reported as ``stale-waiver``.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+RULE_HOST_SYNC = "host-sync-under-jit"
+RULE_RECOMPILE = "recompile-hazard"
+RULE_DTYPE = "dtype-promotion"
+RULE_STALE = "stale-waiver"
+ALL_RULES = (RULE_HOST_SYNC, RULE_RECOMPILE, RULE_DTYPE, RULE_STALE)
+
+# dispatch-adjacent host-sync enforcement is scoped to the serving hot
+# path; training / analysis / bench code legitimately syncs for logging
+ADJACENT_PATH_PARTS = ("serving",)
+# dtype-promotion enforcement is scoped to kernel-adjacent code
+DTYPE_PATH_PARTS = ("kernels", "models")
+
+_FLOAT_DTYPES = {"float32", "bfloat16", "float16"}
+_MATMUL_FUNCS = {"einsum", "matmul", "dot", "tensordot", "dot_general"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass
+class Waiver:
+    rule: str
+    reason: str
+    line: int
+    used: bool = False
+
+
+# ----------------------------------------------------------------------
+# helpers
+# ----------------------------------------------------------------------
+def _is_jax_jit(node: ast.AST, jax_names: Set[str]) -> bool:
+    """``jax.jit`` attribute expression (not the call)."""
+    return (
+        isinstance(node, ast.Attribute)
+        and node.attr == "jit"
+        and isinstance(node.value, ast.Name)
+        and node.value.id in jax_names
+    )
+
+
+def _jit_call_target(call: ast.Call, jax_names: Set[str]) -> Optional[ast.AST]:
+    """For ``jax.jit(x, ...)`` or ``partial(jax.jit, x?)`` return the
+    wrapped expression (or the call itself when only configuring)."""
+    if _is_jax_jit(call.func, jax_names):
+        return call.args[0] if call.args else call
+    func = call.func
+    is_partial = (isinstance(func, ast.Name) and func.id == "partial") or (
+        isinstance(func, ast.Attribute) and func.attr == "partial"
+    )
+    if is_partial and call.args and _is_jax_jit(call.args[0], jax_names):
+        return call.args[1] if len(call.args) > 1 else call
+    return None
+
+
+def _literal(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return all(_literal(e) for e in node.elts)
+    if isinstance(node, ast.UnaryOp):
+        return _literal(node.operand)
+    return False
+
+
+class _Func:
+    """One function-like scope (def / async def / lambda)."""
+
+    def __init__(self, node, name, parent, cls):
+        self.node = node
+        self.name = name
+        self.parent: Optional[_Func] = parent
+        self.cls: Optional[str] = cls  # enclosing class name, if a method
+        self.children: Dict[str, "_Func"] = {}
+        self.calls_names: Set[str] = set()  # bare-name call targets
+        self.calls_self: Set[str] = set()  # self.<attr>() call targets
+        self.strict = False  # body is traced under jit
+        self.adjacent = False  # invokes a jitted callable (dispatch path)
+
+
+class _ModuleIndex(ast.NodeVisitor):
+    """Single pass: function scopes, jit roots, call edges, aliases."""
+
+    def __init__(self, tree: ast.Module):
+        self.module_funcs: Dict[str, _Func] = {}
+        self.all_funcs: List[_Func] = []
+        self.jax_names: Set[str] = set()
+        self.np_names: Set[str] = set()
+        self.dtype_aliases: Dict[str, str] = {}  # F32 -> float32
+        self.jitted_attrs: Dict[str, Set[str]] = {}  # class -> attr names
+        self.jitted_names: Set[str] = set()  # names bound to jax.jit(...)
+        self.jit_calls: List[Tuple[ast.Call, Optional[_Func]]] = []
+        self.static_argnames: Dict[str, Set[str]] = {}  # fn -> static kw
+        self._stack: List[_Func] = []
+        self._cls: List[str] = []
+        self.visit(tree)
+
+    # -- imports / aliases ---------------------------------------------
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            top = a.name.split(".")[0]
+            name = a.asname or top
+            if top == "jax":
+                self.jax_names.add(name)
+            if top == "numpy":
+                self.np_names.add(name)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        val = node.value
+        if (
+            not self._stack
+            and isinstance(val, ast.Attribute)
+            and val.attr in _FLOAT_DTYPES
+            and len(node.targets) == 1
+            and isinstance(node.targets[0], ast.Name)
+        ):
+            self.dtype_aliases[node.targets[0].id] = val.attr
+        if isinstance(val, ast.Call):
+            wrapped = _jit_call_target(val, self.jax_names)
+            if wrapped is not None:
+                self._register_jit(node.targets, wrapped)
+        self.generic_visit(node)
+
+    def _register_jit(self, targets: Sequence[ast.AST], wrapped: ast.AST):
+        for t in targets:
+            if (
+                isinstance(t, ast.Attribute)
+                and isinstance(t.value, ast.Name)
+                and t.value.id == "self"
+                and self._cls
+            ):
+                self.jitted_attrs.setdefault(self._cls[-1], set()).add(t.attr)
+            elif isinstance(t, ast.Name):
+                self.jitted_names.add(t.id)
+        if isinstance(wrapped, ast.Name):
+            f = self._resolve(wrapped.id)
+            if f is not None:
+                f.strict = True
+
+    # -- scopes ---------------------------------------------------------
+    def _enter(self, node, name) -> _Func:
+        parent = self._stack[-1] if self._stack else None
+        cls = self._cls[-1] if self._cls else None
+        f = _Func(node, name, parent, cls)
+        self.all_funcs.append(f)
+        if parent is None:
+            self.module_funcs.setdefault(name, f)
+        else:
+            parent.children[name] = f
+        return f
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._cls.append(node.name)
+        self.generic_visit(node)
+        self._cls.pop()
+
+    def _visit_funcdef(self, node) -> None:
+        f = self._enter(node, node.name)
+        for dec in node.decorator_list:
+            if _is_jax_jit(dec, self.jax_names):
+                f.strict = True
+            elif isinstance(dec, ast.Call) and (
+                _is_jax_jit(dec.func, self.jax_names)
+                or _jit_call_target(dec, self.jax_names) is not None
+            ):
+                f.strict = True
+                for kw in dec.keywords:
+                    if kw.arg == "static_argnames":
+                        names = set()
+                        if isinstance(kw.value, (ast.Tuple, ast.List)):
+                            elts = kw.value.elts
+                        else:
+                            elts = [kw.value]
+                        for e in elts:
+                            if isinstance(e, ast.Constant) and isinstance(
+                                e.value, str
+                            ):
+                                names.add(e.value)
+                        self.static_argnames[node.name] = names
+        self._stack.append(f)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    visit_FunctionDef = _visit_funcdef
+    visit_AsyncFunctionDef = _visit_funcdef
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        f = self._enter(node, f"<lambda:{node.lineno}>")
+        self._stack.append(f)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    # -- calls ----------------------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        cur = self._stack[-1] if self._stack else None
+        wrapped = _jit_call_target(node, self.jax_names)
+        if wrapped is not None:
+            self.jit_calls.append((node, cur))
+            if isinstance(wrapped, ast.Lambda):
+                pass  # lambda scope marked strict below via _mark_jit_lambdas
+            elif isinstance(wrapped, ast.Name):
+                f = self._resolve(wrapped.id, frm=cur)
+                if f is not None:
+                    f.strict = True
+        if cur is not None:
+            if isinstance(node.func, ast.Name):
+                cur.calls_names.add(node.func.id)
+            elif isinstance(node.func, ast.Attribute) and isinstance(
+                node.func.value, ast.Name
+            ) and node.func.value.id == "self":
+                cur.calls_self.add(node.func.attr)
+        self.generic_visit(node)
+
+    def _resolve(self, name: str, frm: Optional[_Func] = None) -> Optional[_Func]:
+        scope = frm if frm is not None else (
+            self._stack[-1] if self._stack else None
+        )
+        while scope is not None:
+            if name in scope.children:
+                return scope.children[name]
+            scope = scope.parent
+        return self.module_funcs.get(name)
+
+
+def _mark_jit_lambdas(idx: _ModuleIndex) -> None:
+    """A ``jax.jit(lambda ...)`` argument is a strict scope."""
+    lam_by_node = {f.node: f for f in idx.all_funcs}
+    for call, _ in idx.jit_calls:
+        wrapped = _jit_call_target(call, idx.jax_names)
+        if isinstance(wrapped, ast.Lambda) and wrapped in lam_by_node:
+            lam_by_node[wrapped].strict = True
+
+
+def _close_over_calls(idx: _ModuleIndex, attr: str) -> None:
+    """Propagate ``strict``/``adjacent`` to same-module callees."""
+    changed = True
+    while changed:
+        changed = False
+        for f in idx.all_funcs:
+            if not getattr(f, attr):
+                continue
+            targets: List[_Func] = []
+            for name in f.calls_names:
+                t = idx._resolve(name, frm=f)
+                if t is not None:
+                    targets.append(t)
+            if f.cls is not None:
+                for mname in f.calls_self:
+                    for g in idx.all_funcs:
+                        if g.cls == f.cls and g.name == mname:
+                            targets.append(g)
+            for t in targets:
+                if not getattr(t, attr):
+                    setattr(t, attr, True)
+                    changed = True
+
+
+def _mark_adjacent(idx: _ModuleIndex) -> None:
+    for f in idx.all_funcs:
+        if f.strict:
+            continue
+        if any(n in idx.jitted_names for n in f.calls_names):
+            f.adjacent = True
+        if f.cls is not None and f.cls in idx.jitted_attrs:
+            if f.calls_self & idx.jitted_attrs[f.cls]:
+                f.adjacent = True
+    _close_over_calls(idx, "adjacent")
+
+
+# ----------------------------------------------------------------------
+# rule scans
+# ----------------------------------------------------------------------
+def _own_nodes(f: _Func):
+    """Walk a function body without descending into nested scopes."""
+    skip = {c.node for c in f.children.values()}
+    stack = list(ast.iter_child_nodes(f.node))
+    while stack:
+        n = stack.pop()
+        if n in skip or isinstance(
+            n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+        ):
+            continue
+        yield n
+        stack.extend(ast.iter_child_nodes(n))
+
+
+def _host_sync_findings(idx: _ModuleIndex, path: str, adjacent_ok: bool):
+    out: List[Finding] = []
+    for f in idx.all_funcs:
+        strict = f.strict
+        adjacent = f.adjacent and adjacent_ok
+        if not (strict or adjacent):
+            continue
+        ctx = "inside jit-traced code" if strict else "on the jitted dispatch path"
+        for n in _own_nodes(f):
+            if not isinstance(n, ast.Call):
+                continue
+            msg = None
+            func = n.func
+            if isinstance(func, ast.Attribute):
+                if (
+                    func.attr == "device_get"
+                    and isinstance(func.value, ast.Name)
+                    and func.value.id in idx.jax_names
+                ):
+                    msg = "jax.device_get"
+                elif (
+                    func.attr in ("asarray", "array")
+                    and isinstance(func.value, ast.Name)
+                    and func.value.id in idx.np_names
+                    and any(not _literal(a) for a in n.args)
+                ):
+                    msg = f"{func.value.id}.{func.attr}"
+                elif func.attr == "item" and not n.args:
+                    msg = ".item()"
+            elif (
+                strict
+                and isinstance(func, ast.Name)
+                and func.id in ("float", "int")
+                and n.args
+                and not _literal(n.args[0])
+            ):
+                msg = f"{func.id}()"
+            if msg is not None:
+                out.append(
+                    Finding(
+                        RULE_HOST_SYNC,
+                        path,
+                        n.lineno,
+                        f"{msg} forces a host sync {ctx} "
+                        f"(in '{f.name}')",
+                    )
+                )
+    return out
+
+
+def _free_names(f: _Func) -> Set[str]:
+    params = set()
+    node = f.node
+    args = node.args
+    for a in (
+        list(args.posonlyargs)
+        + list(args.args)
+        + list(args.kwonlyargs)
+        + ([args.vararg] if args.vararg else [])
+        + ([args.kwarg] if args.kwarg else [])
+    ):
+        params.add(a.arg)
+    assigned, loaded = set(), set()
+    for n in _own_nodes(f):
+        if isinstance(n, ast.Name):
+            if isinstance(n.ctx, ast.Store):
+                assigned.add(n.id)
+            elif isinstance(n.ctx, ast.Load):
+                loaded.add(n.id)
+    return loaded - params - assigned
+
+
+def _recompile_findings(idx: _ModuleIndex, path: str, tree: ast.Module):
+    out: List[Finding] = []
+    # (a) jax.jit under a loop
+    loop_ranges: List[Tuple[int, int]] = []
+    for n in ast.walk(tree):
+        if isinstance(n, (ast.For, ast.While, ast.AsyncFor)):
+            loop_ranges.append((n.lineno, getattr(n, "end_lineno", n.lineno)))
+    for call, _ in idx.jit_calls:
+        if any(lo < call.lineno <= hi for lo, hi in loop_ranges):
+            out.append(
+                Finding(
+                    RULE_RECOMPILE,
+                    path,
+                    call.lineno,
+                    "jax.jit called inside a loop: every iteration builds "
+                    "a fresh callable with an empty compile cache",
+                )
+            )
+    # (b) jitted scope closing over a mutable container literal
+    container = (
+        ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp, ast.SetComp,
+    )
+    for f in idx.all_funcs:
+        if not f.strict or f.parent is None:
+            continue
+        free = _free_names(f)
+        scope = f.parent
+        while scope is not None:
+            for n in _own_nodes(scope):
+                if (
+                    isinstance(n, ast.Assign)
+                    and isinstance(n.value, container)
+                    and any(
+                        isinstance(t, ast.Name) and t.id in free
+                        for t in n.targets
+                    )
+                ):
+                    name = next(
+                        t.id
+                        for t in n.targets
+                        if isinstance(t, ast.Name) and t.id in free
+                    )
+                    out.append(
+                        Finding(
+                            RULE_RECOMPILE,
+                            path,
+                            f.node.lineno,
+                            f"jitted callable closes over mutable container "
+                            f"'{name}' (traced once as a constant; later "
+                            f"mutation is silently ignored)",
+                        )
+                    )
+            scope = scope.parent
+    # (c) raw dynamic int into a static argument of a local jitted fn
+    for f in idx.all_funcs:
+        for n in _own_nodes(f):
+            if not isinstance(n, ast.Call) or not isinstance(n.func, ast.Name):
+                continue
+            static = idx.static_argnames.get(n.func.id)
+            if not static:
+                continue
+            for kw in n.keywords:
+                if kw.arg in static and _has_dynamic_int(kw.value):
+                    out.append(
+                        Finding(
+                            RULE_RECOMPILE,
+                            path,
+                            n.lineno,
+                            f"unbucketed dynamic value for static argument "
+                            f"'{kw.arg}' of jitted '{n.func.id}': one "
+                            f"compile per distinct value (route it through "
+                            f"a bucket table first)",
+                        )
+                    )
+    return out
+
+
+def _has_dynamic_int(expr: ast.AST) -> bool:
+    for n in ast.walk(expr):
+        if isinstance(n, ast.Call) and isinstance(n.func, ast.Name) and (
+            n.func.id == "len"
+        ):
+            return True
+        if (
+            isinstance(n, ast.Subscript)
+            and isinstance(n.value, ast.Attribute)
+            and n.value.attr == "shape"
+        ):
+            return True
+    return False
+
+
+def _expr_cast(expr: ast.AST, aliases: Dict[str, str]) -> Optional[str]:
+    """Explicit float-dtype ``.astype`` cast of an expression, if any."""
+    if isinstance(expr, ast.Call) and isinstance(expr.func, ast.Attribute):
+        if expr.func.attr == "astype" and expr.args:
+            a = expr.args[0]
+            if isinstance(a, ast.Attribute) and a.attr in _FLOAT_DTYPES:
+                return a.attr
+            if isinstance(a, ast.Name) and a.id in aliases:
+                return aliases[a.id]
+            if isinstance(a, ast.Constant) and a.value in _FLOAT_DTYPES:
+                return a.value
+        return None
+    if isinstance(expr, ast.BinOp):
+        lc = _expr_cast(expr.left, aliases)
+        rc = _expr_cast(expr.right, aliases)
+        return lc or rc
+    return None
+
+
+def _dtype_findings(idx: _ModuleIndex, path: str, tree: ast.Module):
+    out: List[Finding] = []
+    aliases = idx.dtype_aliases
+    for n in ast.walk(tree):
+        if isinstance(n, ast.BinOp) and isinstance(
+            n.op, (ast.Add, ast.Sub, ast.Mult, ast.Div, ast.MatMult)
+        ):
+            lc = _expr_cast(n.left, aliases)
+            rc = _expr_cast(n.right, aliases)
+            if lc and rc and lc != rc:
+                out.append(
+                    Finding(
+                        RULE_DTYPE,
+                        path,
+                        n.lineno,
+                        f"arithmetic mixes explicit {lc} and {rc} casts in "
+                        f"one expression (implicit promotion; pick one "
+                        f"accumulator dtype)",
+                    )
+                )
+        elif isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute):
+            if n.func.attr not in _MATMUL_FUNCS:
+                continue
+            if any(kw.arg == "preferred_element_type" for kw in n.keywords):
+                continue
+            casts = [_expr_cast(a, aliases) for a in n.args]
+            low = [c for c in casts if c in ("bfloat16", "float16")]
+            if low:
+                out.append(
+                    Finding(
+                        RULE_DTYPE,
+                        path,
+                        n.lineno,
+                        f"{n.func.attr} with a {low[0]}-cast operand and no "
+                        f"preferred_element_type: accumulation silently "
+                        f"drops to {low[0]}",
+                    )
+                )
+    return out
+
+
+# ----------------------------------------------------------------------
+# waivers + driver
+# ----------------------------------------------------------------------
+_WAIVER_RE = re.compile(r"#\s*check:\s*allow-([a-z][a-z0-9-]*)\(([^)]*)\)")
+
+
+def collect_waivers(source: str) -> List[Waiver]:
+    out = []
+    for i, line in enumerate(source.splitlines(), start=1):
+        for m in _WAIVER_RE.finditer(line):
+            out.append(Waiver(rule=m.group(1), reason=m.group(2), line=i))
+    return out
+
+
+def lint_source(source: str, path: str) -> List[Finding]:
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:  # pragma: no cover - defensive
+        return [Finding("syntax-error", path, e.lineno or 0, str(e))]
+    idx = _ModuleIndex(tree)
+    _mark_jit_lambdas(idx)
+    _close_over_calls(idx, "strict")
+    _mark_adjacent(idx)
+
+    parts = Path(path).parts
+    adjacent_ok = any(p in ADJACENT_PATH_PARTS for p in parts)
+    findings = _host_sync_findings(idx, path, adjacent_ok)
+    findings += _recompile_findings(idx, path, tree)
+    if any(p in DTYPE_PATH_PARTS for p in parts):
+        findings += _dtype_findings(idx, path, tree)
+
+    waivers = collect_waivers(source)
+    kept: List[Finding] = []
+    for f in findings:
+        waived = False
+        for w in waivers:
+            if w.rule == f.rule and w.line in (f.line, f.line - 1):
+                w.used = True
+                waived = True
+        if not waived:
+            kept.append(f)
+    for w in waivers:
+        if not w.used:
+            kept.append(
+                Finding(
+                    RULE_STALE,
+                    path,
+                    w.line,
+                    f"waiver 'allow-{w.rule}' suppresses nothing "
+                    f"(reason: {w.reason or 'none given'}) — remove it",
+                )
+            )
+    kept.sort(key=lambda f: (f.path, f.line, f.rule))
+    return kept
+
+
+def lint_paths(paths: Sequence[str]) -> List[Finding]:
+    files: List[Path] = []
+    for p in paths:
+        pp = Path(p)
+        if pp.is_dir():
+            files.extend(sorted(pp.rglob("*.py")))
+        elif pp.suffix == ".py":
+            files.append(pp)
+    out: List[Finding] = []
+    for f in files:
+        out.extend(lint_source(f.read_text(), str(f)))
+    return out

@@ -1,0 +1,146 @@
+"""Recompile-budget auditor.
+
+The packed ViT encoder and the selective-refresh pass are jitted with
+their geometry as static state (bucketed row lengths, per-layout visit
+lists).  Each distinct geometry is one XLA compile; the bucket schemes
+in ``core/pruning.py`` (``PACK_LEN_BUCKETS`` / ``PACK_ROW_QUANTUM`` /
+``PACK_GROUP_QUANTUM``) exist precisely to bound that count.  This
+auditor drives the *host-side* planners over the bench scenario suite
+(motion profiles x fleet sizes), collects the distinct compile-cache
+keys each scheme emits, and fails when a kernel's declared
+``recompile_budget`` in ``kernels/contracts.py`` is exceeded — the
+signal that a closed-over Python value escaped its bucket.
+
+No XLA compiles happen here: the keys are computed from the planner
+outputs exactly as ``jax.jit`` would see them (shapes + static args).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Set, Tuple
+
+from repro.configs.base import ViTCfg
+from repro.core.kvc import refresh_block_map
+from repro.core.pruning import (
+    PACK_GROUP_QUANTUM,
+    PACK_LEN_BUCKETS,
+    PACK_ROW_QUANTUM,
+    pack_plan,
+)
+from repro.kernels import contracts
+
+from .dispatch_audit import (
+    KV_TILE,
+    LAYOUTS,
+    MAX_NEW_TOKENS,
+    _synthetic_decision,
+)
+
+
+@dataclasses.dataclass
+class BudgetResult:
+    op: str
+    scenarios: int
+    distinct_keys: int
+    budget: int
+    keys: List[tuple]
+
+    @property
+    def ok(self) -> bool:
+        return self.distinct_keys <= self.budget
+
+    def render(self) -> str:
+        status = "ok" if self.ok else "OVER BUDGET"
+        return (
+            f"{self.op}: {self.distinct_keys} distinct compile keys over "
+            f"{self.scenarios} scenarios (budget {self.budget}) — {status}"
+        )
+
+
+# The bench scenario suite: motion profiles (kept-capacity fill) from
+# near-static scenes to full-motion sports, across fleet batch sizes.
+MOTION_FILLS: Tuple[float, ...] = (0.05, 0.15, 0.30, 0.50, 0.75, 1.00)
+FLEET_SIZES: Tuple[int, ...] = (1, 2, 4, 8)
+P_FRAMES_PER_WINDOW = 12  # 16-frame window, gop 4 -> 12 P-frames
+K_GROUPS = 128
+
+
+def audit_packed() -> BudgetResult:
+    """Distinct packed-encoder geometries across the scenario suite.
+
+    The jitted ``encode_packed_tokens`` keys on (rows, l_pack, k_pack,
+    t_max, tq, tk): everything ``pack_plan`` quantizes.
+    """
+    v = ViTCfg()
+    keys: Set[tuple] = set()
+    n = 0
+    for fleet in FLEET_SIZES:
+        for i, fill in enumerate(MOTION_FILLS):
+            for rep in range(3):  # repeated windows, fresh packing noise
+                dec = _synthetic_decision(
+                    v, fleet * P_FRAMES_PER_WINDOW, K_GROUPS, fill,
+                    seed=1000 + 100 * i + 10 * rep + fleet,
+                )
+                plan = pack_plan(dec, v, tile=128)
+                bm = plan.block_map
+                keys.add(
+                    (
+                        plan.seg_id.shape[0],  # rows (row-quantized)
+                        plan.l_pack,  # bucket
+                        plan.group_src.shape[0],  # k_pack (group-quantized)
+                        bm.tile_ids.shape[2],  # t_max (pow2-rounded)
+                        bm.tq,
+                        bm.tk,
+                    )
+                )
+                n += 1
+                assert plan.l_pack in PACK_LEN_BUCKETS
+                assert plan.seg_id.shape[0] % PACK_ROW_QUANTUM == 0
+                assert plan.group_src.shape[0] % PACK_GROUP_QUANTUM == 0
+    budget = contracts.FLASH_PACKED.recompile_budget
+    return BudgetResult(
+        "flash_packed", n, len(keys), budget, sorted(keys, key=repr)
+    )
+
+
+def audit_refresh() -> BudgetResult:
+    """Distinct selective-refresh geometries: one per (layout, fleet
+    size) — the per-layout block map is a cached constant, so repeated
+    windows of one stream group must not add keys."""
+    keys: Set[tuple] = set()
+    n = 0
+    for lay, sw in LAYOUTS:
+        need = lay.total_len + MAX_NEW_TOKENS
+        slots = -(-need // KV_TILE) * KV_TILE
+        for fleet in FLEET_SIZES:
+            for _rep in range(3):  # steady-state windows: same key
+                bm = refresh_block_map(lay, window=sw, kv_len=slots)
+                keys.add(
+                    (
+                        fleet,
+                        bm.q_pos.shape[0],  # padded n_q
+                        bm.kv_len,
+                        bm.causal,
+                        bm.window,
+                        bm.tq,
+                        bm.tk,
+                        bm.tile_ids.shape[1],  # t_max
+                    )
+                )
+                n += 1
+    budget = contracts.FLASH_REFRESH.recompile_budget
+    expected = len(LAYOUTS) * len(FLEET_SIZES)
+    res = BudgetResult(
+        "flash_refresh", n, len(keys), budget, sorted(keys, key=repr)
+    )
+    # steady state must be retrace-free: exactly one key per
+    # (layout, fleet) pair, never one per window
+    assert res.distinct_keys <= expected, (res.distinct_keys, expected)
+    return res
+
+
+def run_audit() -> Tuple[List[BudgetResult], List[str]]:
+    results = [audit_packed(), audit_refresh()]
+    failures = [r.render() for r in results if not r.ok]
+    return results, failures
