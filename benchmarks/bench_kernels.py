@@ -323,6 +323,8 @@ def _serve_smoke(emit) -> dict:
         out[f"smoke_{mode}_flops_prefill"] = sum(
             s.flops_prefill for s in stats)
         out[f"smoke_{mode}_pack_util"] = sched.vit_pack_utilization
+        out[f"smoke_{mode}_t_overhead"] = sum(
+            s.t_overhead for s in stats) / max(n_windows, 1)
         emit(csv_row(
             f"kernels/smoke_{mode}", 1e6 / max(wps, 1e-9),
             f"windows/s={wps:.2f} refresh/win={refreshed:.0f} "

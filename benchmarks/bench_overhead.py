@@ -57,4 +57,22 @@ def run(emit) -> dict:
     emit(csv_row("overhead/share", 0.0,
                  f"{out['share_of_window']*100:.1f}% of window latency "
                  f"(paper: ~4%)"))
+
+    # fused-window state staging: legacy per-stream cache concat/split
+    # vs paged slab (page-table staging only, docs/paged_kv.md).  Same
+    # streams, same fleet — the t_overhead delta is pure KV movement.
+    concat = run_mode("codecflow", concurrent=4, paged=False)
+    paged = run_mode("codecflow", concurrent=4, paged=True)
+    out["t_overhead_concat_s"] = concat["t_overhead"]
+    out["t_overhead_paged_s"] = paged["t_overhead"]
+    out["staging_reduction_x"] = (
+        concat["t_overhead"] / max(paged["t_overhead"], 1e-9)
+    )
+    emit(csv_row(
+        "overhead/kv_staging_concat", concat["t_overhead"] * 1e6,
+        "per-window cache concat/split at concurrent=4"))
+    emit(csv_row(
+        "overhead/kv_staging_paged", paged["t_overhead"] * 1e6,
+        f"page-table staging ({out['staging_reduction_x']:.1f}x less "
+        f"than concat)"))
     return out

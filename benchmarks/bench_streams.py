@@ -1,0 +1,50 @@
+"""Multi-stream scaling: fused-window throughput and KV staging
+overhead as the concurrent fleet grows.
+
+Serves the same eval corpus at increasing ``max_concurrent`` with the
+paged slab (page-table staging, ``docs/paged_kv.md``) and with the
+legacy per-stream concat/split path — the t_overhead gap is the KV
+bytes the scheduler no longer moves per fused window.
+
+Fleet sizes come from ``STREAM_FLEETS`` (comma-separated, default
+``1,2,4``); the nightly workflow raises it to stress higher stream
+counts than the PR-gating smoke can afford.
+"""
+from __future__ import annotations
+
+import os
+
+from .common import csv_row, eval_videos, run_mode
+
+
+def _fleets() -> tuple:
+    raw = os.environ.get("STREAM_FLEETS", "1,2,4")
+    return tuple(int(x) for x in raw.split(",") if x.strip())
+
+
+def run(emit) -> dict:
+    out = {"fleets": list(_fleets())}
+    for n in _fleets():
+        # at least as many streams as slots, so the fleet actually fills
+        videos = eval_videos(max(2 * n, 6))
+        for paged in (True, False):
+            tag = "paged" if paged else "concat"
+            r = run_mode("codecflow", videos=videos, concurrent=n,
+                         paged=paged)
+            out[f"s{n}_{tag}_windows_per_s"] = r["windows_per_s"]
+            out[f"s{n}_{tag}_t_overhead"] = r["t_overhead"]
+            out[f"s{n}_{tag}_f1"] = r["f1"]
+            emit(csv_row(
+                f"streams/c{n}_{tag}",
+                1e6 / max(r["windows_per_s"], 1e-9),
+                f"windows/s={r['windows_per_s']:.2f} "
+                f"t_overhead={r['t_overhead'] * 1e3:.2f}ms",
+            ))
+        # paged and concat must agree on every answer: the slab is an
+        # allocation strategy, not an approximation
+        assert out[f"s{n}_paged_f1"] == out[f"s{n}_concat_f1"], n
+        out[f"s{n}_staging_reduction_x"] = (
+            out[f"s{n}_concat_t_overhead"]
+            / max(out[f"s{n}_paged_t_overhead"], 1e-9)
+        )
+    return out

@@ -51,10 +51,12 @@ def eval_videos(n: int = 6, n_frames: int = 28, seed: int = 100):
     )
 
 
-def make_pipeline(mode: str, codec: CodecCfg = CODEC) -> ServingPipeline:
+def make_pipeline(mode: str, codec: CodecCfg = CODEC,
+                  paged: bool = True) -> ServingPipeline:
     lm_params, vit_params = trained_stack()
     return ServingPipeline(LM, VIT, lm_params, vit_params,
-                           EngineCfg(mode=mode, codec=codec))
+                           EngineCfg(mode=mode, codec=codec,
+                                     paged_kv=paged))
 
 
 def make_engine(mode: str, codec: CodecCfg = CODEC) -> Engine:
@@ -62,16 +64,18 @@ def make_engine(mode: str, codec: CodecCfg = CODEC) -> Engine:
 
 
 def run_mode(mode: str, codec: CodecCfg = CODEC, videos=None,
-             concurrent: int = 1) -> Dict:
+             concurrent: int = 1, paged: bool = True) -> Dict:
     """Aggregate one system variant over the eval corpus.
 
     ``concurrent=1`` (default) serves streams sequentially — per-window
     wall-clock timings are directly comparable to the paper's batch=1
     latency figures.  ``concurrent>1`` admits that many sessions and
     fuses same-phase windows into batched stage calls (throughput mode).
+    ``paged=False`` forces the legacy concat/split KV staging (the
+    paged-vs-concat A/B in bench_overhead).
     """
     videos = videos if videos is not None else eval_videos()
-    pipeline = make_pipeline(mode, codec)
+    pipeline = make_pipeline(mode, codec, paged=paged)
     eng = Engine.from_pipeline(pipeline)
     # warmup: trace the batch=1 jitted paths (fresh-prefill window and
     # selective windows), and the batched paths at the first wave's

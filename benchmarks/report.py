@@ -7,6 +7,15 @@
         Compact kernel/serving table for $GITHUB_STEP_SUMMARY: windows/s
         from the serve smoke probe plus the refresh-attention FLOPs
         ledger of the block-sparse kernel path.
+
+    PYTHONPATH=src python -m benchmarks.report --compare base.json cur.json
+        Bench-regression gate: delta table (markdown) of the current
+        run against a baseline artifact (latest main).  Exits non-zero
+        when a FLOP-ledger metric regresses by more than 10% — those
+        are deterministic counts, so any drift is a real code change.
+        Wall-clock rows (windows/s, t_overhead, kernel microbench us)
+        are informational only: shared CI runners are too noisy to
+        gate on.
 """
 import json
 import sys
@@ -160,12 +169,107 @@ def ci_summary(r) -> str:
     return "\n".join(out)
 
 
+# ----------------------------------------------------------------------
+# bench-regression gate (CI --compare mode)
+# ----------------------------------------------------------------------
+#: Deterministic FLOP-ledger metrics under ``["kernels"]``: any >10%
+#: regression fails the job.  Direction "down" = smaller is better.
+GATED_METRICS = (
+    ("smoke_codecflow_flops_prefill", "down", "codecflow prefill FLOPs"),
+    ("smoke_fullcomp_flops_prefill", "down", "fullcomp prefill FLOPs"),
+    ("smoke_codecflow_refreshed_per_window", "down",
+     "refreshed tokens / window"),
+    ("refresh_flops_sparse", "down", "refresh attn FLOPs (block-sparse)"),
+    ("refresh_tiles_visited", "down", "refresh kv tiles visited"),
+    ("vitpack_min_flop_speedup", "up", "ViT packing FLOP speedup"),
+    ("dispatch_fallback_decisions", "down", "silent kernel fallbacks"),
+)
+
+#: Wall-clock metrics: reported in the delta table, never gated (CI
+#: runner noise).  Direction only orients the arrow rendering.
+INFO_METRICS = (
+    ("smoke_codecflow_windows_per_s", "up", "codecflow windows/s"),
+    ("smoke_fullcomp_windows_per_s", "up", "fullcomp windows/s"),
+    ("smoke_codecflow_t_overhead", "down", "codecflow t_overhead/window"),
+    ("smoke_fullcomp_t_overhead", "down", "fullcomp t_overhead/window"),
+    ("refresh_dispatch_us", "down", "flash_refresh dispatch us"),
+    ("mv_sad", "down", "mv_sad us"),
+    ("rope_shift", "down", "rope_shift us"),
+    ("ssd_scan", "down", "ssd_scan us"),
+)
+
+REGRESSION_THRESHOLD = 0.10
+
+
+def _rel_regression(base: float, cur: float, direction: str) -> float:
+    """Regression fraction (positive = worse) in the gated direction."""
+    if base == 0:
+        return float("inf") if (cur > 0 and direction == "down") else 0.0
+    d = (cur - base) / abs(base)
+    return d if direction == "down" else -d
+
+
+def compare(base: dict, cur: dict,
+            threshold: float = REGRESSION_THRESHOLD):
+    """Returns (markdown report, list of gate-failure strings)."""
+    kb, kc = base.get("kernels", {}), cur.get("kernels", {})
+    failures = []
+    out = ["## Bench regression vs baseline", "",
+           "| metric | baseline | current | delta | gate |",
+           "|---|---|---|---|---|"]
+
+    def fmt(v):
+        if v is None:
+            return "—"
+        return f"{v:.4g}" if isinstance(v, float) else str(v)
+
+    for key, direction, label in GATED_METRICS + INFO_METRICS:
+        gated = (key, direction, label) in GATED_METRICS
+        b, c = kb.get(key), kc.get(key)
+        if b is None or c is None:
+            out.append(f"| {label} | {fmt(b)} | {fmt(c)} | — | "
+                       f"{'skipped (missing)' if gated else 'info'} |")
+            continue
+        reg = _rel_regression(float(b), float(c), direction)
+        delta = "n/a" if b == 0 else f"{(float(c) - float(b)) / abs(float(b)):+.1%}"
+        if not gated:
+            verdict = "info"
+        elif reg > threshold:
+            verdict = f"**FAIL** (> {threshold:.0%})"
+            failures.append(
+                f"{label}: {fmt(b)} -> {fmt(c)} "
+                f"({delta}, allowed {threshold:.0%})"
+            )
+        else:
+            verdict = "ok"
+        out.append(f"| {label} | {fmt(b)} | {fmt(c)} | {delta} | {verdict} |")
+
+    out.append("")
+    if failures:
+        out.append(f"**{len(failures)} FLOP-ledger regression(s)** — "
+                   "deterministic counts moved; this is a code change, "
+                   "not runner noise:")
+        out += [f"- {f}" for f in failures]
+    else:
+        out.append("No FLOP-ledger regressions; wall-clock rows are "
+                   "informational.")
+    return "\n".join(out), failures
+
+
 def main() -> None:
     args = [a for a in sys.argv[1:]]
     mode = "repro"
     if "--ci-summary" in args:
         mode = "ci"
         args.remove("--ci-summary")
+    if "--compare" in args:
+        args.remove("--compare")
+        assert len(args) == 2, "--compare needs: baseline.json current.json"
+        base = json.load(open(args[0]))
+        cur = json.load(open(args[1]))
+        report, failures = compare(base, cur)
+        print(report)
+        sys.exit(1 if failures else 0)
     path = args[0] if args else "experiments/bench_results.json"
     r = json.load(open(path))
     print(ci_summary(r) if mode == "ci" else reproduction_table(r))

@@ -25,6 +25,7 @@ BENCHES = [
     ("ablation", "benchmarks.bench_ablation", "Fig. 15"),
     ("sensitivity", "benchmarks.bench_sensitivity", "Figs. 16-18"),
     ("overhead", "benchmarks.bench_overhead", "Fig. 19"),
+    ("streams", "benchmarks.bench_streams", "multi-stream scaling"),
 ]
 
 

@@ -13,6 +13,10 @@ from .kvc import (
     WindowLayout, refresh_block_map, shift_cache, reuse_caches,
     shift_valid, selective_refresh, full_prefill,
 )
+from .kv_pool import (
+    PAGE_SIZE, KVPool, PoolExhausted, gather_pages, logical_to_physical,
+    pool_pages_needed, reuse_pool_caches,
+)
 
 __all__ = [
     "motion_mask", "block_to_patch",
@@ -21,4 +25,6 @@ __all__ = [
     "group_mask",
     "WindowLayout", "refresh_block_map", "shift_cache", "reuse_caches",
     "shift_valid", "selective_refresh", "full_prefill",
+    "PAGE_SIZE", "KVPool", "PoolExhausted", "gather_pages",
+    "logical_to_physical", "pool_pages_needed", "reuse_pool_caches",
 ]

@@ -1,0 +1,200 @@
+"""Paged KV pool: one shared slab per layer + per-stream page tables.
+
+vLLM-style paging for the streaming serving path (docs/paged_kv.md).
+Instead of each ``StreamSession`` owning a private ``(R, 1, slots, ...)``
+cache that the ``Scheduler`` concatenates/splits around every fused
+window, all concurrent streams share ONE pre-allocated slab per
+attention position:
+
+    slab leaf:   (R, n_pages * PAGE, n_kv, d_head)      # batchless
+    page table:  (B, pages_per_stream) int32            # per stream
+
+A stream's logical cache slot ``s`` lives at physical row
+``page_table[s // PAGE] * PAGE + s % PAGE``.  Admission pops page ids
+off a host-side free list and eviction pushes them back — KV bytes are
+never copied when streams enter or leave, and a fused batch is formed
+by stacking page tables (a few hundred int32s) instead of gathering
+multi-MB caches.
+
+Correctness does not require zeroing recycled pages: every slot a
+window attends to is either freshly written this window (scatter /
+decode append) or masked out by ``kv_valid`` — and the oracle/kernel
+numerics turn masked logits into exact zeros (``-1e30`` fill), so a
+previous tenant's stale KV contributes exactly ``0.0`` to the output.
+That is what makes paged == concat *bitwise*, asserted in
+``tests/test_kv_pool.py``.
+
+The slab is only built for pure-attention stacks: SSM/hybrid families
+stream boundary states instead of KV (``repro.serving.engine``) and
+keep the legacy path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelCfg
+from ..kernels import ops
+from ..models import transformer as tfm
+from ..models.layers import KVCache
+from .kvc import WindowLayout
+
+#: Page size in KV slots.  Fixed at the kernel KV tile (128) so each kv
+#: tile of the visit list maps to exactly one page — the "page-tile"
+#: eligibility rule in ``kernels/contracts.py``.
+PAGE_SIZE = 128
+
+
+class PoolExhausted(RuntimeError):
+    """Raised when ``admit`` needs more pages than the free list holds."""
+
+
+def logical_to_physical(
+    page_table: jnp.ndarray, idx: jnp.ndarray, page: int = PAGE_SIZE
+) -> jnp.ndarray:
+    """Map logical slot indices ``idx`` (T,) through per-stream page
+    tables (B, n_pages) -> physical slab rows (B, T)."""
+    return page_table[:, idx // page] * page + idx % page
+
+
+class KVPool:
+    """Fixed-size paged KV slab with a LIFO free list.
+
+    All state mutation (``admit`` / ``evict``) is host-side numpy; the
+    device-resident ``slab`` (a ``tfm.Caches`` with batchless leaves) is
+    functionally updated by the jitted serving calls and stored back by
+    the caller (``AttentionPrefill``).
+    """
+
+    def __init__(
+        self,
+        cfg: ModelCfg,
+        n_pages: int,
+        page: int = PAGE_SIZE,
+        dtype=jnp.bfloat16,
+    ) -> None:
+        for pos in range(cfg.period):
+            mixer, _ = cfg.block_kind(pos)
+            assert mixer == "attn", (
+                "KVPool serves pure-attention stacks; SSM/hybrid "
+                "families use boundary-state streaming"
+            )
+        self.cfg = cfg
+        self.page = page
+        self.n_pages = n_pages
+        shape = (cfg.repeats, n_pages * page, cfg.n_kv, cfg.d_head)
+        blocks = tuple(
+            KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+            for _ in range(cfg.period)
+        )
+        self.slab: tfm.Caches = tfm.Caches(blocks, None)
+        # LIFO: recently-evicted pages are re-admitted first (tested as
+        # "page-table reuse after evict")
+        self._free: list = list(range(n_pages - 1, -1, -1))
+        self._in_use: set = set()
+
+    # -- free-list accounting ------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return len(self._in_use)
+
+    def can_admit(self, n_pages: int) -> bool:
+        return n_pages <= len(self._free)
+
+    def admit(self, n_pages: int) -> np.ndarray:
+        """Pop ``n_pages`` page ids; raises :class:`PoolExhausted` when
+        the free list is short (callers keep the stream queued)."""
+        if n_pages > len(self._free):
+            raise PoolExhausted(
+                f"need {n_pages} pages, {len(self._free)} free "
+                f"of {self.n_pages}"
+            )
+        pages = [self._free.pop() for _ in range(n_pages)]
+        self._in_use.update(pages)
+        return np.asarray(pages, np.int32)
+
+    def admit_streams(self, n_streams: int, pages_per_stream: int) -> np.ndarray:
+        """Admit ``n_streams`` streams at once -> (S, pages_per_stream)."""
+        pages = self.admit(n_streams * pages_per_stream)
+        return pages.reshape(n_streams, pages_per_stream)
+
+    def evict(self, pages) -> None:
+        """Return a stream's pages to the free list (no KV copy)."""
+        for p in np.asarray(pages, np.int64).ravel().tolist():
+            assert p in self._in_use, f"double free of page {p}"
+            self._in_use.discard(p)
+            self._free.append(p)
+
+
+def gather_pages(
+    leaf: jnp.ndarray, page_table: jnp.ndarray, page: int = PAGE_SIZE
+) -> jnp.ndarray:
+    """Materialize the logical per-stream view of one slab leaf.
+
+    leaf (..., P_phys, n_kv, d_head) with the physical axis at -3,
+    page_table (B, n_pages) -> (..., B, n_pages * page, n_kv, d_head).
+    Debug/oracle helper — the kernels index the slab in place.
+    """
+    B, n_pages = page_table.shape
+    rows = page_table[..., None] * page + jnp.arange(page)[None, None, :]
+    rows = rows.reshape(B, n_pages * page)  # (B, S_logical)
+    return jnp.take(leaf, rows, axis=leaf.ndim - 3)
+
+
+def reuse_pool_caches(
+    cfg: ModelCfg,
+    caches: tfm.Caches,
+    page_table: jnp.ndarray,
+    layout: WindowLayout,
+    page: int = PAGE_SIZE,
+) -> tfm.Caches:
+    """Paged twin of ``kvc.reuse_caches`` (position-consistent reuse).
+
+    Gathers the overlap KV through the page table, applies the Eq. 5
+    rotation (``rope_shift``), and scatters it back to logical slots
+    [0, overlap).  Gather-then-scatter (instead of an in-slab slice
+    move) keeps source and destination pages from aliasing; operand
+    shapes fed to ``rope_shift`` match the dense ``shift_cache`` path
+    exactly, so the rotated keys are bitwise identical.
+    """
+    sh, ov, vl = layout.shift_tokens, layout.overlap_tokens, layout.vis_len
+    src = jnp.arange(sh, vl, dtype=jnp.int32)
+    dst = jnp.arange(0, ov, dtype=jnp.int32)
+    phys_src = logical_to_physical(page_table, src, page)  # (B, ov)
+    phys_dst = logical_to_physical(page_table, dst, page)
+    B = page_table.shape[0]
+    new_blocks = []
+    for blk in caches.blocks:
+        R = blk.k.shape[0]
+        k_over = blk.k[:, phys_src]  # (R, B, ov, n_kv, d_head)
+        v_over = blk.v[:, phys_src]
+        flat_k = k_over.reshape((R * B,) + k_over.shape[2:])
+        delta = jnp.full((R * B, ov), -sh, jnp.int32)
+        k_corr = ops.rope_shift(flat_k, delta, cfg.rope_theta)
+        k_corr = k_corr.reshape(k_over.shape).astype(blk.k.dtype)
+        new_blocks.append(KVCache(
+            blk.k.at[:, phys_dst].set(k_corr),
+            blk.v.at[:, phys_dst].set(v_over),
+        ))
+    return tfm.Caches(tuple(new_blocks), caches.cross)
+
+
+def pool_pages_needed(cache_slots: int, page: int = PAGE_SIZE) -> int:
+    """Pages per stream for an ``AttentionPrefill`` slot allocation."""
+    assert cache_slots % page == 0, (cache_slots, page)
+    return cache_slots // page
+
+
+__all__ = [
+    "PAGE_SIZE",
+    "KVPool",
+    "PoolExhausted",
+    "gather_pages",
+    "logical_to_physical",
+    "pool_pages_needed",
+    "reuse_pool_caches",
+]

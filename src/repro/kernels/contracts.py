@@ -183,6 +183,73 @@ def flash_refresh_facts(
     return facts
 
 
+def flash_refresh_paged_facts(
+    q, k, v, q_pos, kv_valid, page_table, *, page: int, causal: bool,
+    window, block_map,
+    positions_match: Callable[[], bool] = lambda: True,
+) -> dict:
+    """Facts for the paged refresh op.  ``k``/``v`` are the batchless
+    (P_phys, Hkv, D) slab; the logical KV length is derived from the
+    page table (n_pages * page), which is what the block map and the
+    ``kv_valid`` mask are expressed in."""
+    pt_shape = tuple(page_table.shape)
+    facts = {
+        "q_shape": tuple(q.shape),
+        "k_shape": tuple(k.shape),
+        "v_shape": tuple(v.shape),
+        "q_pos_shape": tuple(q_pos.shape),
+        "pt_shape": pt_shape,
+        "q_dtype": _dt(q),
+        "k_dtype": _dt(k),
+        "v_dtype": _dt(v),
+        "q_pos_dtype": _dt(q_pos),
+        "pt_dtype": _dt(page_table),
+        "kv_valid_shape": None if kv_valid is None else tuple(kv_valid.shape),
+        "kv_valid_dtype": None if kv_valid is None else _dt(kv_valid),
+        "page": int(page),
+        "logical_len": (
+            pt_shape[1] * int(page) if len(pt_shape) == 2 else -1
+        ),
+        "causal": bool(causal),
+        "window": window,
+        "has_map": block_map is not None,
+        "positions_match": positions_match,
+    }
+    if block_map is not None:
+        facts.update(
+            map_n_q=block_map.n_q,
+            map_kv_len=block_map.kv_len,
+            map_tq=block_map.tq,
+            map_tk=block_map.tk,
+            map_causal=block_map.causal,
+            map_window=block_map.window,
+        )
+    return facts
+
+
+def flash_prefill_paged_facts(
+    q, k, v, page_table, *, page: int, causal: bool, window, q_offset: int
+) -> dict:
+    pt_shape = tuple(page_table.shape)
+    return {
+        "q_shape": tuple(q.shape),
+        "k_shape": tuple(k.shape),
+        "v_shape": tuple(v.shape),
+        "pt_shape": pt_shape,
+        "q_dtype": _dt(q),
+        "k_dtype": _dt(k),
+        "v_dtype": _dt(v),
+        "pt_dtype": _dt(page_table),
+        "page": int(page),
+        "logical_len": (
+            pt_shape[1] * int(page) if len(pt_shape) == 2 else -1
+        ),
+        "causal": bool(causal),
+        "window": window,
+        "q_offset": int(q_offset),
+    }
+
+
 def flash_packed_facts(
     q, k, v, seg_id, tile_ids, tile_count, *, tq: int, tk: int
 ) -> dict:
@@ -464,6 +531,205 @@ FLASH_REFRESH = KernelContract(
     recompile_budget=20,
 )
 
+FLASH_REFRESH_PAGED = KernelContract(
+    name="flash_refresh_paged",
+    kernel="repro.kernels.flash_refresh.flash_refresh_paged_pallas",
+    oracle="repro.kernels.ref.flash_refresh_paged_ref",
+    description=(
+        "Paged block-sparse refresh attention: visit list -> page table "
+        "-> physical kv tile in the shared slab (core/kv_pool.py)."
+    ),
+    preconditions=(
+        Rule(
+            "rank",
+            "q rank-4, slab k/v rank-3, q_pos rank-2, page_table rank-2",
+            lambda f: len(f["q_shape"]) == 4
+            and len(f["k_shape"]) == 3
+            and len(f["v_shape"]) == 3
+            and len(f["q_pos_shape"]) == 2
+            and len(f["pt_shape"]) == 2,
+        ),
+        Rule(
+            "kv-shape",
+            "k and v slabs have identical shapes",
+            lambda f: f["k_shape"] == f["v_shape"],
+        ),
+        Rule(
+            "q-pos-shape",
+            "q_pos is (B, Sq)",
+            lambda f: f["q_pos_shape"]
+            == (f["q_shape"][0], f["q_shape"][1]),
+        ),
+        Rule(
+            "pt-batch",
+            "page_table leads with q's batch dim",
+            lambda f: f["pt_shape"][0] == f["q_shape"][0],
+        ),
+        Rule(
+            "head-dim",
+            "q and the slab share the head dim",
+            lambda f: f["q_shape"][3] == f["k_shape"][2],
+        ),
+        Rule(
+            "gqa",
+            "query heads divide evenly over kv heads",
+            lambda f: f["q_shape"][2] % f["k_shape"][1] == 0,
+        ),
+        Rule("dtype", "q/k/v are f32/bf16/f16 with k == v", _attn_dtype_ok),
+        Rule(
+            "q-pos-dtype",
+            "q_pos is integer token positions",
+            lambda f: _kind(f["q_pos_dtype"]) in "iu",
+        ),
+        Rule(
+            "pt-dtype",
+            "page_table is integer page ids",
+            lambda f: _kind(f["pt_dtype"]) in "iu",
+        ),
+        Rule(
+            "slab-align",
+            "slab row count divides by the page size",
+            lambda f: f["page"] >= 1 and f["k_shape"][0] % f["page"] == 0,
+        ),
+        Rule(
+            "kv-valid",
+            "kv_valid is a (B, n_pages * page) bool mask over logical "
+            "slots (mandatory: recycled pages hold stale KV)",
+            lambda f: f["kv_valid_shape"]
+            == (f["q_shape"][0], f["logical_len"])
+            and f["kv_valid_dtype"] == "bool",
+        ),
+    ),
+    eligibility=(
+        Rule("map-present", "a RefreshBlockMap was supplied", lambda f: f["has_map"]),
+        Rule(
+            "map-n-q",
+            "map was built for this query count",
+            lambda f: f["map_n_q"] == f["q_shape"][1],
+        ),
+        Rule(
+            "map-kv-len",
+            "map was built for the logical stream length",
+            lambda f: f["map_kv_len"] == f["logical_len"],
+        ),
+        Rule(
+            "page-tile",
+            "the map's key tile equals the page size (one visit-list "
+            "entry == one slab page)",
+            lambda f: f["map_tk"] == f["page"],
+        ),
+        Rule(
+            "map-causal",
+            "map and call agree on causal masking",
+            lambda f: f["map_causal"] == f["causal"],
+        ),
+        Rule(
+            "map-window",
+            "map and call agree on the sliding window",
+            lambda f: f["map_window"] == f["window"],
+        ),
+        Rule(
+            "positions",
+            "concrete q_pos equals the map's positions (traced: trusted)",
+            lambda f: f["positions_match"](),
+        ),
+    ),
+    tile=(128, 128),
+    visit_list=(
+        "tile_ids (n_q_tiles, t_max) + tile_count (n_q_tiles,) int32 in "
+        "logical tile coordinates, plus page_table (B, n_pages) int32 — "
+        "all scalar-prefetched; the BlockSpec index map composes them: "
+        "kv tile = pt[b, tile_ids[iq, it]]"
+    ),
+    compile_key=(
+        "(B, padded Sq, n_pages, P_phys, H, Hkv, D, dtype, causal, "
+        "window, tq, page, t_max) — the slab shape is pool-static and "
+        "the per-layout map is lru-cached, so stream churn adds no keys"
+    ),
+    # same layouts x fleet sizes as flash_refresh: page tables are
+    # dynamic values, so paging must add zero compile keys
+    recompile_budget=20,
+)
+
+FLASH_PREFILL_PAGED = KernelContract(
+    name="flash_prefill_paged",
+    kernel="repro.kernels.flash_prefill.flash_prefill_paged_pallas",
+    oracle="repro.kernels.ref.flash_prefill_paged_ref",
+    description=(
+        "Paged causal GQA attention: contiguous logical window, kv "
+        "tiles DMA'd from the shared slab through the page table."
+    ),
+    preconditions=(
+        Rule(
+            "rank",
+            "q rank-4, slab k/v rank-3, page_table rank-2",
+            lambda f: len(f["q_shape"]) == 4
+            and len(f["k_shape"]) == 3
+            and len(f["v_shape"]) == 3
+            and len(f["pt_shape"]) == 2,
+        ),
+        Rule(
+            "kv-shape",
+            "k and v slabs have identical shapes",
+            lambda f: f["k_shape"] == f["v_shape"],
+        ),
+        Rule(
+            "pt-batch",
+            "page_table leads with q's batch dim",
+            lambda f: f["pt_shape"][0] == f["q_shape"][0],
+        ),
+        Rule(
+            "head-dim",
+            "q and the slab share the head dim",
+            lambda f: f["q_shape"][3] == f["k_shape"][2],
+        ),
+        Rule(
+            "gqa",
+            "query heads divide evenly over kv heads",
+            lambda f: f["q_shape"][2] % f["k_shape"][1] == 0,
+        ),
+        Rule("dtype", "q/k/v are f32/bf16/f16 with k == v", _attn_dtype_ok),
+        Rule(
+            "pt-dtype",
+            "page_table is integer page ids",
+            lambda f: _kind(f["pt_dtype"]) in "iu",
+        ),
+        Rule(
+            "slab-align",
+            "slab row count divides by the page size",
+            lambda f: f["page"] >= 1 and f["k_shape"][0] % f["page"] == 0,
+        ),
+        Rule(
+            "causal",
+            "causal masking is mandatory: it is what hides stale "
+            "previous-tenant rows in recycled pages",
+            lambda f: f["causal"],
+        ),
+        Rule(
+            "window",
+            "sliding window is None or >= 1",
+            lambda f: f["window"] is None or f["window"] >= 1,
+        ),
+    ),
+    eligibility=(
+        Rule("q-tile", "Sq divides by Tq=128", lambda f: f["q_shape"][1] % 128 == 0),
+        Rule(
+            "page-tile",
+            "page size equals the key tile Tk=128",
+            lambda f: f["page"] == 128,
+        ),
+    ),
+    tile=(128, 128),
+    visit_list=(
+        "page_table (B, n_pages) int32, scalar-prefetched; the key-axis "
+        "grid runs over logical pages and the index map reads pt[b, ik]"
+    ),
+    compile_key=(
+        "(B, Sq, n_pages, P_phys, H, Hkv, D, dtype, window, q_offset) — "
+        "pool-static slab shape; page tables are dynamic values"
+    ),
+)
+
 FLASH_PACKED = KernelContract(
     name="flash_packed",
     kernel="repro.kernels.flash_packed.flash_packed_pallas",
@@ -606,7 +872,9 @@ CONTRACTS: dict[str, KernelContract] = {
         MV_SAD,
         ROPE_SHIFT,
         FLASH_PREFILL,
+        FLASH_PREFILL_PAGED,
         FLASH_REFRESH,
+        FLASH_REFRESH_PAGED,
         FLASH_PACKED,
         SSD_SCAN,
     )

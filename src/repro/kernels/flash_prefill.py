@@ -124,3 +124,136 @@ def flash_prefill_pallas(
         interpret=interpret,
     )
     return out(qt, kt, vt).transpose(0, 2, 1, 3)
+
+
+# ======================================================================
+# Paged variant (page table -> kv tile)
+# ======================================================================
+def _flash_paged_kernel(
+    pt_ref,                                  # scalar-prefetch (SMEM)
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, tq: int, tk: int, n_k: int, scale: float, causal: bool,
+    window: int | None, q_offset: int,
+):
+    """Same body as ``_flash_kernel``; kv tiles are DMA'd from the shared
+    batchless slab — ``pt_ref`` is consumed by the BlockSpec index maps
+    and ``kpos`` stays the *logical* slot (``ik * tk``)."""
+    del pt_ref  # only used in the index maps
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale       # (Tq, D)
+    k = k_ref[0].astype(jnp.float32)                  # (Tk, D) slab page
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    qpos = iq * tq + jax.lax.iota(jnp.int32, tq)[:, None] + q_offset
+    kpos = ik * tk + jax.lax.iota(jnp.int32, tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(logits, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(logits - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("page", "causal", "window", "q_offset", "tq", "tk",
+                     "interpret"),
+)
+def flash_prefill_paged_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    page_table: jnp.ndarray,
+    *,
+    page: int = 128,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    tq: int = 128,
+    tk: int = 128,
+    interpret: bool = False,
+):
+    """Paged causal GQA attention over the shared KV slab.
+
+    q: (B, Sq, H, D); k, v: (P_phys, Hkv, D) batchless slab with
+    P_phys % page == 0; page_table: (B, n_pages) int32 — the stream's
+    logical KV length is n_pages * page.  tk must equal page so each kv
+    grid step is one slab page.  Causality is mandatory here: fresh
+    prefill writes logical slots [0, Sq) before reading, so any stale
+    previous-tenant rows sit strictly in the causal future and are
+    masked; there is no ``kv_valid`` operand on this path.
+    """
+    B, Sq, H, D = q.shape
+    P_phys, Hkv, _ = k.shape
+    g = H // Hkv
+    assert tk == page, (tk, page)
+    assert causal, "paged prefill relies on causal masking of stale pages"
+    tq = min(tq, Sq)
+    assert Sq % tq == 0 and P_phys % page == 0, (Sq, tq, P_phys, page)
+    n_k = page_table.shape[1]
+    scale = D ** -0.5
+
+    qt = q.transpose(0, 2, 1, 3)                      # (B, H, Sq, D)
+    kt = k.transpose(1, 0, 2)                         # (Hkv, P_phys, D)
+    vt = v.transpose(1, 0, 2)
+
+    kernel = functools.partial(
+        _flash_paged_kernel, tq=tq, tk=tk, n_k=n_k, scale=scale,
+        causal=causal, window=window, q_offset=q_offset,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, Sq // tq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, tq, D), lambda b, h, iq, ik, pt: (b, h, iq, 0)),
+            pl.BlockSpec(
+                (1, tk, D), lambda b, h, iq, ik, pt: (h // g, pt[b, ik], 0)
+            ),
+            pl.BlockSpec(
+                (1, tk, D), lambda b, h, iq, ik, pt: (h // g, pt[b, ik], 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, tq, D), lambda b, h, iq, ik, pt: (b, h, iq, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((tq, 1), jnp.float32),   # running max  m
+            pltpu.VMEM((tq, 1), jnp.float32),   # running norm l
+            pltpu.VMEM((tq, D), jnp.float32),   # accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -315,3 +315,165 @@ def flash_refresh_pallas(
     )(tile_ids.astype(jnp.int32), tile_count.astype(jnp.int32),
       qt, qp2, kt, vt, kvm)
     return out.transpose(0, 2, 1, 3)
+
+
+# ======================================================================
+# Paged kernel (visit list -> page table -> kv tile)
+# ======================================================================
+def _refresh_paged_kernel(
+    ids_ref, cnt_ref, pt_ref,               # scalar-prefetch (SMEM)
+    q_ref, qpos_ref, k_ref, v_ref, kvm_ref,  # VMEM tiles
+    o_ref, m_ref, l_ref, acc_ref,
+    *, tk: int, t_max: int, scale: float, causal: bool, window: int | None,
+):
+    """Same online-softmax body as ``_refresh_kernel``; the kv tile is
+    DMA'd from a shared batchless slab instead of a per-stream cache —
+    ``pt_ref`` is consumed by the BlockSpec index maps (visit list gives
+    a *logical* tile id, the page table turns it into a physical page).
+    The in-kernel mask stays logical: ``kp`` is the logical slot."""
+    del pt_ref  # only used in the index maps
+    iq = pl.program_id(2)
+    it = pl.program_id(3)
+
+    @pl.when(it == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(it < cnt_ref[iq])
+    def _compute():
+        kid = ids_ref[iq, it]
+        q = q_ref[0, 0].astype(jnp.float32) * scale     # (Tq, D)
+        k = k_ref[0].astype(jnp.float32)                # (Tk, D) slab page
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        qp = qpos_ref[0][:, None]
+        kp = kid * tk + jax.lax.iota(jnp.int32, tk)[None, :]
+        mask = kvm_ref[0, 0][None, :] != 0
+        if causal:
+            mask &= kp <= qp
+        if window is not None:
+            mask &= kp > qp - window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(logits - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = m_new
+
+    @pl.when(it == t_max - 1)
+    def _finish():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("page", "causal", "window", "tq", "tk", "interpret"),
+)
+def flash_refresh_paged_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,
+    kv_valid: jnp.ndarray,
+    page_table: jnp.ndarray,
+    tile_ids: jnp.ndarray,
+    tile_count: jnp.ndarray,
+    *,
+    page: int = 128,
+    causal: bool = True,
+    window: int | None = None,
+    tq: int = 128,
+    tk: int = 128,
+    interpret: bool = False,
+):
+    """Paged ``flash_refresh_pallas``: KV lives in one shared slab.
+
+    Args:
+      q: (B, Sq, H, D) gathered refresh queries, Sq % tq == 0.
+      k, v: (P_phys, Hkv, D) the pooled slab for this layer — batchless;
+        P_phys % page == 0.
+      q_pos: (Sq,) int32 logical query positions, -1 for padding rows.
+      kv_valid: (B, S_logical) per-stream *logical* validity where
+        S_logical = page_table.shape[1] * page.
+      page_table: (B, n_pages) int32 per-stream page table; entry ``p``
+        maps logical tile ``p`` to slab rows [pt*page, (pt+1)*page).
+      tile_ids / tile_count: logical visit list (``RefreshBlockMap``).
+
+    Requires tk == page so one visit-list entry is one slab page (the
+    "page-tile" eligibility rule).  Returns (B, Sq, H, D).
+    """
+    B, Sq, H, D = q.shape
+    P_phys, Hkv, _ = k.shape
+    g = H // Hkv
+    assert tk == page, (tk, page)
+    assert Sq % tq == 0 and P_phys % page == 0, (Sq, tq, P_phys, page)
+    n_pages = page_table.shape[1]
+    Sk = n_pages * page
+    assert kv_valid.shape == (B, Sk), (kv_valid.shape, B, Sk)
+    n_q_tiles = Sq // tq
+    t_max = tile_ids.shape[1]
+    assert tile_ids.shape[0] == n_q_tiles, (tile_ids.shape, n_q_tiles)
+    scale = D ** -0.5
+
+    qt = q.transpose(0, 2, 1, 3)                      # (B, H, Sq, D)
+    kt = k.transpose(1, 0, 2)                         # (Hkv, P_phys, D)
+    vt = v.transpose(1, 0, 2)
+    qp2 = q_pos.astype(jnp.int32).reshape(n_q_tiles, tq)
+    kvm = kv_valid.astype(jnp.int32).reshape(B, n_pages, tk)
+
+    kernel = functools.partial(
+        _refresh_paged_kernel, tk=tk, t_max=t_max, scale=scale,
+        causal=causal, window=window,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, H, n_q_tiles, t_max),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, tq, D), lambda b, h, iq, it, ids, cnt, pt: (b, h, iq, 0)
+            ),
+            pl.BlockSpec((1, tq), lambda b, h, iq, it, ids, cnt, pt: (iq, 0)),
+            # visit list -> page table -> physical kv tile
+            pl.BlockSpec(
+                (1, tk, D),
+                lambda b, h, iq, it, ids, cnt, pt: (h // g, pt[b, ids[iq, it]], 0),
+            ),
+            pl.BlockSpec(
+                (1, tk, D),
+                lambda b, h, iq, it, ids, cnt, pt: (h // g, pt[b, ids[iq, it]], 0),
+            ),
+            # validity stays logical (per stream, not per slab row)
+            pl.BlockSpec(
+                (1, 1, tk),
+                lambda b, h, iq, it, ids, cnt, pt: (b, ids[iq, it], 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, tq, D), lambda b, h, iq, it, ids, cnt, pt: (b, h, iq, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        interpret=interpret,
+    )(tile_ids.astype(jnp.int32), tile_count.astype(jnp.int32),
+      page_table.astype(jnp.int32), qt, qp2, kt, vt, kvm)
+    return out.transpose(0, 2, 1, 3)

@@ -22,8 +22,12 @@ import numpy as np
 from . import contracts, ref
 from .contracts import OK
 from .flash_packed import flash_packed_pallas
-from .flash_prefill import flash_prefill_pallas
-from .flash_refresh import RefreshBlockMap, flash_refresh_pallas
+from .flash_prefill import flash_prefill_pallas, flash_prefill_paged_pallas
+from .flash_refresh import (
+    RefreshBlockMap,
+    flash_refresh_paged_pallas,
+    flash_refresh_pallas,
+)
 from .mv_sad import mv_sad_pallas
 from .rope_shift import rope_shift_pallas
 from .ssd_scan import ssd_scan_pallas
@@ -233,6 +237,93 @@ def _flash_refresh_ref_chunked(
     )
     out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq + pad, H, D)
     return out[:, :Sq]
+
+
+def flash_refresh_paged(
+    q,
+    k,
+    v,
+    q_pos,
+    kv_valid,
+    page_table,
+    *,
+    page: int = 128,
+    causal: bool = True,
+    window: int | None = None,
+    block_map: RefreshBlockMap | None = None,
+    q_chunk: int = 1024,
+):
+    """Paged ``flash_refresh``: KV lives in one shared batchless slab.
+
+    q: (B, Sq, H, D); k, v: (P_phys, Hkv, D) pooled slab; q_pos: (B, Sq)
+    int32 *logical* positions; kv_valid: (B, n_pages * page) bool
+    (mandatory — recycled pages hold stale tenants); page_table:
+    (B, n_pages) int32.  The block map stays in logical coordinates —
+    the kernel composes it with the page table per grid step, so the
+    same lru-cached per-``WindowLayout`` map serves every stream mix.
+    """
+    facts = contracts.flash_refresh_paged_facts(
+        q, k, v, q_pos, kv_valid, page_table, page=page, causal=causal,
+        window=window, block_map=block_map,
+        positions_match=lambda: _positions_match_map(q_pos, block_map),
+    )
+    contracts.validate("flash_refresh_paged", facts)
+    use, interp = _use_pallas()
+    Sq = q.shape[1]
+    dec = contracts.decide("flash_refresh_paged", facts)
+    _record("flash_refresh_paged", use, dec.reason)
+    if use and dec.use_kernel:
+        bm = block_map
+        pad = bm.q_pos.shape[0] - Sq
+        qp = jnp.asarray(bm.q_pos)
+        qq = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+        out = flash_refresh_paged_pallas(
+            qq, k, v, qp, kv_valid, page_table,
+            jnp.asarray(bm.tile_ids), jnp.asarray(bm.tile_count),
+            page=page, causal=causal, window=window, tq=bm.tq, tk=bm.tk,
+            interpret=interp,
+        )
+        return out[:, :Sq]
+    # oracle: materialize the logical view once, reuse the chunked path
+    kg = ref.paged_gather_ref(k, page_table, page)
+    vg = ref.paged_gather_ref(v, page_table, page)
+    return _flash_refresh_ref_chunked(
+        q, kg, vg, q_pos, kv_valid, causal=causal, window=window,
+        q_chunk=q_chunk,
+    )
+
+
+def flash_prefill_paged(
+    q,
+    k,
+    v,
+    page_table,
+    *,
+    page: int = 128,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+):
+    """Paged ``flash_prefill``: q (B, Sq, H, D) against the shared slab
+    k, v (P_phys, Hkv, D) through page_table (B, n_pages) int32.  Causal
+    only — the mask is what hides stale rows in recycled pages."""
+    facts = contracts.flash_prefill_paged_facts(
+        q, k, v, page_table, page=page, causal=causal, window=window,
+        q_offset=q_offset,
+    )
+    contracts.validate("flash_prefill_paged", facts)
+    use, interp = _use_pallas()
+    dec = contracts.decide("flash_prefill_paged", facts)
+    _record("flash_prefill_paged", use, dec.reason)
+    if use and dec.use_kernel:
+        return flash_prefill_paged_pallas(
+            q, k, v, page_table, page=page, causal=causal, window=window,
+            q_offset=q_offset, interpret=interp,
+        )
+    return ref.flash_prefill_paged_ref(
+        q, k, v, page_table, page=page, causal=causal, window=window,
+        q_offset=q_offset,
+    )
 
 
 def flash_packed(

@@ -193,6 +193,72 @@ def flash_refresh_ref(
 
 
 # ----------------------------------------------------------------------
+# paged variants: gather the logical per-stream view from the KV slab
+# ----------------------------------------------------------------------
+def paged_gather_ref(
+    slab: jnp.ndarray, page_table: jnp.ndarray, page: int
+) -> jnp.ndarray:
+    """Materialize per-stream logical KV from a batchless paged slab.
+
+    slab: (P_phys, Hkv, D) pooled rows; page_table: (B, n_pages) int32.
+    Returns (B, n_pages * page, Hkv, D) — logical slot ``s`` of stream
+    ``b`` is slab row ``page_table[b, s // page] * page + s % page``.
+    The gather preserves value identity and ordering, which is what
+    makes the paged oracles (and kernels) *bitwise* equal to the dense
+    ones on the gathered view.
+    """
+    B, n_pages = page_table.shape
+    rows = page_table[:, :, None] * page + jnp.arange(page)[None, None, :]
+    return slab[rows.reshape(B, n_pages * page)]
+
+
+def flash_refresh_paged_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,
+    kv_valid: jnp.ndarray,
+    page_table: jnp.ndarray,
+    *,
+    page: int = 128,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+):
+    """Oracle for the paged refresh kernel: gather + ``flash_refresh_ref``.
+
+    k, v are the batchless (P_phys, Hkv, D) slab; everything else is in
+    logical per-stream coordinates (see ``flash_refresh_paged_pallas``).
+    """
+    kg = paged_gather_ref(k, page_table, page)
+    vg = paged_gather_ref(v, page_table, page)
+    return flash_refresh_ref(
+        q, kg, vg, q_pos, kv_valid, causal=causal, window=window, scale=scale
+    )
+
+
+def flash_prefill_paged_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    page_table: jnp.ndarray,
+    *,
+    page: int = 128,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    scale: float | None = None,
+):
+    """Oracle for the paged prefill kernel: gather + ``flash_prefill_ref``."""
+    kg = paged_gather_ref(k, page_table, page)
+    vg = paged_gather_ref(v, page_table, page)
+    return flash_prefill_ref(
+        q, kg, vg, causal=causal, window=window, q_offset=q_offset,
+        scale=scale,
+    )
+
+
+# ----------------------------------------------------------------------
 # flash_packed: block-diagonal (segment-masked) attention for packed ViT
 # ----------------------------------------------------------------------
 def flash_packed_ref(

@@ -164,6 +164,8 @@ def attention_block(
     causal: bool = True,
     q_chunk: int = 1024,
     block_map=None,
+    page_table: Optional[jnp.ndarray] = None,
+    page_size: int = 128,
 ) -> Tuple[jnp.ndarray, Optional[KVCache]]:
     """Unified attention block.
 
@@ -182,6 +184,13 @@ def attention_block(
     ``q_pos`` must equal the scatter positions, which only that mode
     guarantees (the contiguous mode's positions depend on the dynamic
     ``cache_offset``).
+
+    Paged mode (``page_table`` (B, n_pages) int32): ``cache`` is the
+    *batchless* per-layer slab of the shared KV pool (P_phys, n_kv, dh)
+    from ``core/kv_pool.py``; both write modes map logical slots through
+    the page table (slot s -> pt[s // page_size] * page_size + s %
+    page_size) and reads dispatch through ``ops.flash_refresh_paged``.
+    ``cache_len`` is then mandatory and must equal n_pages * page_size.
     """
     B, T, _ = x.shape
     q, k, v = _qkv(p, cfg, x, positions)
@@ -191,6 +200,37 @@ def attention_block(
         out = mha(q, k, v, positions, positions, valid, causal=causal,
                   window=window, q_chunk=q_chunk)
         new_cache = None
+    elif page_table is not None:
+        S = cache_len
+        assert S is not None and S == page_table.shape[1] * page_size, (
+            S, page_table.shape, page_size,
+        )
+        if scatter_idx is not None:
+            idx = scatter_idx
+        else:
+            idx = cache_offset + jnp.arange(T, dtype=jnp.int32)
+        phys = page_table[:, idx // page_size] * page_size + idx % page_size
+        ck = cache.k.at[phys].set(k.astype(cache.k.dtype))
+        cv = cache.v.at[phys].set(v.astype(cache.v.dtype))
+        new_cache = KVCache(ck, cv)
+        if scatter_idx is not None:
+            kval = (kv_valid[:, :S] if kv_valid is not None
+                    else jnp.ones((B, S), bool))
+            bm = block_map
+        else:
+            kpos = jnp.arange(S)[None]
+            kval = jnp.broadcast_to(kpos <= (cache_offset + T - 1), (B, S))
+            if kv_valid is not None:
+                kval &= kv_valid[:, :S]
+            if valid is not None:
+                kval &= jax.lax.dynamic_update_slice_in_dim(
+                    jnp.ones((B, S), bool), valid, cache_offset, 1
+                )
+            bm = None  # positions depend on the dynamic cache_offset
+        out = ops.flash_refresh_paged(
+            q, ck, cv, positions, kval, page_table, page=page_size,
+            causal=causal, window=window, block_map=bm, q_chunk=q_chunk,
+        )
     elif scatter_idx is not None:
         ck = cache.k.at[:, scatter_idx].set(k.astype(cache.k.dtype))
         cv = cache.v.at[:, scatter_idx].set(v.astype(cache.v.dtype))

@@ -138,6 +138,8 @@ def _apply_block(
     scatter_idx=None,
     kv_valid=None,
     block_map=None,
+    page_table=None,
+    page_size: int = 128,
 ):
     mixer, ffn = cfg.block_kind(pos)
     hn = layers.rmsnorm(p["ln1"], h, cfg.norm_eps)
@@ -148,6 +150,7 @@ def _apply_block(
             cache=cache, cache_offset=cache_offset, cache_len=cache_len,
             scatter_idx=scatter_idx, kv_valid=kv_valid,
             q_chunk=q_chunk, block_map=block_map,
+            page_table=page_table, page_size=page_size,
         )
     else:
         if decode:
@@ -187,12 +190,19 @@ def run_stack(
     scatter_idx=None,
     kv_valid=None,
     block_map=None,
+    page_table=None,
+    page_size: int = 128,
 ):
     """Scan the block stack.  Returns (h, new_caches, aux_sum).
 
     ``block_map`` (a ``kernels.flash_refresh.RefreshBlockMap``) is the
     static tile-visit list for the cached attention modes; the same
     geometry applies to every attention layer in the stack.
+
+    ``page_table`` (B, n_pages) int32 switches the attention layers to
+    the paged KV pool (``core/kv_pool.py``): ``caches`` then holds the
+    shared *batchless* slab and ``cache_len`` must be the logical
+    per-stream length (n_pages * page_size).
     """
     use_cache = caches is not None
     has_cross = use_cache and caches.cross is not None
@@ -231,6 +241,7 @@ def run_stack(
                 decode=decode, q_chunk=q_chunk,
                 scatter_idx=scatter_idx, kv_valid=kv_valid,
                 block_map=block_map,
+                page_table=page_table, page_size=page_size,
             )
             new_caches.append(nc)
             aux = aux + a
@@ -395,17 +406,25 @@ def prefill(
 
 def decode_step(
     cfg: ModelCfg, params, token: jnp.ndarray, caches: Caches, cur_len,
+    page_table=None, cache_len: Optional[int] = None, page_size: int = 128,
 ):
     """One decode step.  token: (B, 1) int32; cur_len: scalar int32 (new
-    token's position / write index).  Returns (logits (B,V), caches)."""
+    token's position / write index).  Returns (logits (B,V), caches).
+
+    With ``page_table``, ``caches`` is the shared paged slab and
+    ``cache_len`` must be passed explicitly (the slab's physical row
+    count says nothing about the per-stream logical length)."""
     h = embed_tokens(cfg, params, token)
     B = h.shape[0]
     positions = jnp.broadcast_to(jnp.asarray(cur_len)[None, None], (B, 1)).astype(jnp.int32)
     off = jnp.asarray(cur_len, jnp.int32)
-    cache_len = caches_max_len(cfg, caches)
+    if cache_len is None:
+        assert page_table is None, "paged decode needs an explicit cache_len"
+        cache_len = caches_max_len(cfg, caches)
     h, new_caches, _ = run_stack(
         cfg, params, h, positions, None, caches,
         cache_offset=off, cache_len=cache_len, decode=True,
+        page_table=page_table, page_size=page_size,
     )
     hn = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     return lm_logits(cfg, params, hn[:, -1]), new_caches

@@ -46,7 +46,9 @@ from ..core import (
     WindowLayout, capacity_groups, motion_mask, pack_plan,
     refresh_block_map, reuse_caches, select_tokens,
 )
+from ..core import kv_pool
 from ..kernels import ops as kernel_ops
+from ..kernels.flash_refresh import build_block_map
 from ..models import layers
 from ..models import transformer as tfm
 from . import metrics
@@ -75,6 +77,13 @@ class EngineCfg:
     # variable-capacity buffers (docs/vit_packing.md) instead of padding
     # every frame to the static K_sel capacity
     packed_vit: bool = True
+    # reuse modes on attention families: per-stream KV lives in a shared
+    # paged slab (core/kv_pool.py, docs/paged_kv.md) — fused windows
+    # stage page tables instead of concatenating caches, stream churn
+    # never copies KV.  ``pool_streams`` pins the pool capacity (in
+    # streams); None sizes it from the scheduler's max_concurrent.
+    paged_kv: bool = True
+    pool_streams: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -346,6 +355,7 @@ class PrefillResult(NamedTuple):
     n_refreshed: int             # tokens recomputed through the LLM
     flops: float                 # prefill FLOPs per stream
     t_select: float              # measured refresh-selection overhead
+    page_table: Any = None       # (S, pages/stream) slab pages, paged mode
 
 
 class PrefillBackend(Protocol):
@@ -409,7 +419,7 @@ class AttentionPrefill:
         block_map = self.block_map
         alloc = self.cache_slots
 
-        def selective(params, caches, remb, rval, kvv, idx):
+        def selective(params, caches, remb, rval, kvv, idx, page_table=None):
             B = remb.shape[0]
             positions = jnp.broadcast_to(idx[None], (B, idx.shape[0]))
             kv_full = kvv.at[:, idx].set(rval)
@@ -418,7 +428,8 @@ class AttentionPrefill:
                 cfg, params, h, positions, None, caches,
                 cache_offset=None, cache_len=alloc,
                 scatter_idx=idx, kv_valid=kv_full, q_chunk=qc,
-                block_map=block_map,
+                block_map=block_map, page_table=page_table,
+                page_size=self.KV_TILE,
             )
             hn = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
             logits = tfm.lm_logits(cfg, params, hn[:, -1])
@@ -426,11 +437,107 @@ class AttentionPrefill:
 
         self._jit_selective = jax.jit(selective)
 
+        # -- paged KV: shared slab + per-stream page tables ------------
+        # Reuse modes on the attention family keep per-stream KV in one
+        # pre-allocated slab (core/kv_pool.py).  Fresh/step/selective
+        # run the SAME math as the dense path through a page-table
+        # indirection, so paged == concat bit-for-bit on the oracle
+        # backend; stream admit/evict only moves page indices.
+        assert self.KV_TILE == kv_pool.PAGE_SIZE
+        self.paged = bool(
+            ecfg.paged_kv
+            and ecfg.mode in ("codecflow", "refresh_only", "cacheblend",
+                              "vlcache")
+        )
+        self.pages_per_stream = self.cache_slots // self.KV_TILE
+        self.pool: Optional[kv_pool.KVPool] = None
+        self._pool_hint = ecfg.pool_streams or 1
+        # fresh windows in paged mode go through scatter-mode run_stack
+        # (tfm.prefill assumes batched dense caches); their q positions
+        # are the full [0, total_len) range, so the visit list is a
+        # per-layout constant exactly like the refresh map.
+        self.fresh_map = (
+            build_block_map(
+                np.arange(layout.total_len, dtype=np.int32),
+                self.cache_slots, causal=True, window=cfg.sliding_window,
+            )
+            if self.paged else None
+        )
+        fresh_map = self.fresh_map
+        total = layout.total_len
+
+        def paged_fresh(params, caches, page_table, embeds, valid):
+            S = embeds.shape[0]
+            idx = jnp.arange(total, dtype=jnp.int32)
+            positions = jnp.broadcast_to(idx[None], (S, total))
+            kvv = jnp.zeros((S, alloc), bool).at[:, idx].set(valid)
+            h = embeds.astype(params["embed"].dtype)
+            h, new_caches, _ = tfm.run_stack(
+                cfg, params, h, positions, None, caches,
+                cache_offset=None, cache_len=alloc,
+                scatter_idx=idx, kv_valid=kvv, q_chunk=qc,
+                block_map=fresh_map, page_table=page_table,
+                page_size=self.KV_TILE,
+            )
+            hn = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+            logits = tfm.lm_logits(cfg, params, hn[:, -1])
+            return logits, new_caches
+
+        self._jit_paged_fresh = jax.jit(paged_fresh)
+        self._jit_paged_reuse = jax.jit(
+            lambda caches, pt: kv_pool.reuse_pool_caches(
+                cfg, caches, pt, layout, self.KV_TILE
+            )
+        )
+
+    # -- paged pool lifecycle ------------------------------------------
+    def ensure_pool(self, n_streams: int) -> None:
+        """Make sure the slab can hold ``n_streams`` concurrent streams.
+
+        The scheduler calls this with its ``max_concurrent`` before any
+        stream is admitted; growing is only legal while no pages are in
+        use (``pool_streams`` pins the capacity instead)."""
+        if not self.paged:
+            return
+        if self.ecfg.pool_streams is not None:
+            want = self.ecfg.pool_streams
+        else:
+            self._pool_hint = max(self._pool_hint, n_streams)
+            want = self._pool_hint
+        need = want * self.pages_per_stream
+        if self.pool is None:
+            self.pool = kv_pool.KVPool(self.cfg, need, page=self.KV_TILE)
+        elif self.pool.n_pages < need:
+            assert self.pool.used_pages == 0, \
+                "cannot grow a pool with pages in use; pin pool_streams"
+            self.pool = kv_pool.KVPool(self.cfg, need, page=self.KV_TILE)
+
+    def can_admit(self, n_streams: int) -> bool:
+        if not self.paged or self.pool is None:
+            return True
+        return self.pool.can_admit(n_streams * self.pages_per_stream)
+
+    def release(self, state: Optional[Dict[str, Any]]) -> None:
+        """Return a finished stream's pages to the free list (no copy)."""
+        if state is None:
+            return
+        pages = state.pop("pages", None)
+        if pages is not None and self.pool is not None:
+            self.pool.evict(pages)
+
     def _result(self, logits, vis, vval, caches, kv_valid, valid,
-                n_refreshed, flops, t_select) -> PrefillResult:
+                n_refreshed, flops, t_select, pages=None,
+                page_table=None) -> PrefillResult:
         lay = self.layout
-        state = {"vis": vis, "vval": vval, "caches": caches,
-                 "kv_valid": kv_valid}
+        if pages is not None:
+            # paged: KV lives in the shared slab; the per-stream state
+            # carries only page indices (host ints — staging them is the
+            # whole t_overhead of a fused window).
+            state = {"vis": vis, "vval": vval, "kv_valid": kv_valid,
+                     "pages": pages}
+        else:
+            state = {"vis": vis, "vval": vval, "caches": caches,
+                     "kv_valid": kv_valid}
         return PrefillResult(
             logits=logits, decode_caches=caches,
             decode_start=lay.total_len,
@@ -439,6 +546,7 @@ class AttentionPrefill:
             # check: allow-host-sync-under-jit(WindowStats needs concrete counts; stage output already awaited)
             tokens_valid=np.asarray(valid.sum(axis=1)),
             n_refreshed=n_refreshed, flops=flops, t_select=t_select,
+            page_table=page_table,
         )
 
     # -- fresh window --------------------------------------------------
@@ -450,6 +558,22 @@ class AttentionPrefill:
         valid = jnp.concatenate(
             [vval, jnp.ones((S, lay.query_len), bool)], 1
         )
+        if self.paged:
+            self.ensure_pool(S)
+            pool = self.pool
+            pages = pool.admit_streams(S, self.pages_per_stream)
+            pt = jnp.asarray(pages, jnp.int32)
+            logits, slab = self._jit_paged_fresh(
+                self.params, pool.slab, pt, embeds, valid
+            )
+            pool.slab = slab
+            kv_valid = jnp.pad(valid, ((0, 0), (0, alloc - lay.total_len)))
+            flops = flopcount.prefill_flops(
+                self.cfg, lay.total_len, lay.total_len
+            )
+            return self._result(logits, vis, vval, slab, kv_valid, valid,
+                                lay.total_len, flops, 0.0,
+                                pages=pages, page_table=pt)
         caches = tfm.init_caches(self.cfg, S, alloc)
         logits, caches, _ = self._jit_prefill(
             self.params, jnp.zeros((S, lay.total_len), jnp.int32),
@@ -475,32 +599,45 @@ class AttentionPrefill:
         valid = jnp.concatenate(
             [vval, jnp.ones((S, lay.query_len), bool)], 1
         )
-        caches = self._jit_reuse(state["caches"])
+        pages = pt = None
+        if self.paged:
+            pages = state["pages"]
+            pt = jnp.asarray(pages, jnp.int32)
+            caches = self._jit_paged_reuse(self.pool.slab, pt)
+            self.pool.slab = caches
+        else:
+            caches = self._jit_reuse(state["caches"])
         prev_valid = state["kv_valid"]
         kvv = jnp.zeros((S, alloc), bool)
         kvv = kvv.at[:, : lay.overlap_tokens].set(
             prev_valid[:, lay.shift_tokens: lay.vis_len]
         )
         t0 = time.perf_counter()
-        ridx = self.refresh_indices(embeds, caches)
+        ridx = self.refresh_indices(embeds, caches, page_table=pt)
         t_select = time.perf_counter() - t0
         remb = jnp.take_along_axis(
             embeds, jnp.asarray(ridx)[None, :, None], axis=1
         )
         rval = jnp.take_along_axis(valid, jnp.asarray(ridx)[None], axis=1)
         logits, caches, _ = self._jit_selective(
-            self.params, caches, remb, rval, kvv, jnp.asarray(ridx)
+            self.params, caches, remb, rval, kvv, jnp.asarray(ridx), pt
         )
+        if self.paged:
+            self.pool.slab = caches
         kv_valid = kvv.at[:, jnp.asarray(ridx)].set(rval)
         flops = flopcount.prefill_flops(self.cfg, len(ridx), lay.total_len)
         return self._result(logits, vis, vval, caches, kv_valid, valid,
-                            len(ridx), flops, t_select)
+                            len(ridx), flops, t_select,
+                            pages=pages, page_table=pt)
 
     def absorb_decode(self, state, caches) -> None:
         """Decode extends the stream caches in place; the decode slots
         become valid for the next window's shift."""
         lay, nd = self.layout, self.ecfg.max_new_tokens
-        state["caches"] = caches
+        if "pages" in state:
+            self.pool.slab = caches        # decode wrote the shared slab
+        else:
+            state["caches"] = caches
         state["kv_valid"] = state["kv_valid"].at[
             :, lay.total_len: lay.total_len + nd
         ].set(True)
@@ -512,7 +649,8 @@ class AttentionPrefill:
         across streams so incremental windows cannot share one call."""
         return self.ecfg.mode != "cacheblend"
 
-    def refresh_indices(self, embeds, reused_caches) -> np.ndarray:
+    def refresh_indices(self, embeds, reused_caches,
+                        page_table=None) -> np.ndarray:
         mode, lay = self.ecfg.mode, self.layout
         if mode in ("codecflow", "refresh_only"):
             return lay.refresh_token_idx
@@ -540,7 +678,12 @@ class AttentionPrefill:
             from ..kernels.ref import apply_rope_ref
             pos = jnp.arange(lay.overlap_tokens)[None]
             k_new = apply_rope_ref(kq, pos, self.cfg.rope_theta)
-            k_reused = reused_caches.blocks[0].k[0][:, : lay.overlap_tokens]
+            blk0 = reused_caches.blocks[0].k[0]
+            if page_table is not None:
+                # paged slab: gather this stream's logical view first
+                from ..kernels.ref import paged_gather_ref
+                blk0 = paged_gather_ref(blk0, page_table, self.KV_TILE)
+            k_reused = blk0[:, : lay.overlap_tokens]
             dev = jnp.linalg.norm(
                 (k_new - k_reused.astype(k_new.dtype)).astype(F32),
                 axis=(-1, -2),
@@ -642,11 +785,23 @@ class GreedyDecoder:
                 cfg, params, tok, caches, pos
             )
         )
+        # paged twin: caches are the shared slab, so the logical extent
+        # cannot be read off the cache shape — it is a static closure of
+        # the jit (cache_len) with the page table as a traced operand.
+        self._jit_decode_paged = jax.jit(
+            lambda params, tok, caches, pos, pt, clen: tfm.decode_step(
+                cfg, params, tok, caches, pos,
+                page_table=pt, cache_len=clen,
+            ),
+            static_argnums=(5,),
+        )
 
     def decode(self, logits: jnp.ndarray, caches, start_pos: int,
-               flops_len) -> Tuple[np.ndarray, np.ndarray, Any, float]:
+               flops_len, page_table=None, cache_len: Optional[int] = None,
+               ) -> Tuple[np.ndarray, np.ndarray, Any, float]:
         """logits: (S, V) last prefill logits.  ``flops_len(i)`` gives
         the attended context length of decode step i (family-specific).
+        ``page_table`` + ``cache_len`` switch to paged-slab decode.
 
         Returns (answers (S,), yes_no (S, 2), caches, flops_decode)."""
         # check: allow-host-sync-under-jit(greedy answer decision is host control flow by design)
@@ -657,9 +812,15 @@ class GreedyDecoder:
         )
         f_decode = 0.0
         for i in range(self.max_new_tokens):
-            logits_d, caches = self._jit_decode(
-                self.params, tok, caches, start_pos + i
-            )
+            if page_table is not None:
+                logits_d, caches = self._jit_decode_paged(
+                    self.params, tok, caches, start_pos + i,
+                    page_table, cache_len,
+                )
+            else:
+                logits_d, caches = self._jit_decode(
+                    self.params, tok, caches, start_pos + i
+                )
             tok = jnp.argmax(logits_d, -1)[:, None].astype(jnp.int32)
             f_decode += flopcount.decode_flops(self.cfg, flops_len(i))
         return answers, yes_no, caches, f_decode
@@ -707,6 +868,24 @@ class ServingPipeline:
             self.backend, "cache_slots",
             self.layout.total_len + ecfg.max_new_tokens,
         )
+        self.paged = getattr(self.backend, "paged", False)
+
+    # -- paged pool lifecycle (no-ops for non-paged backends) ----------
+    def ensure_capacity(self, n_streams: int) -> None:
+        """Pre-size the shared KV pool for ``n_streams`` streams."""
+        if self.paged:
+            self.backend.ensure_pool(n_streams)
+
+    def can_admit(self, n_streams: int = 1) -> bool:
+        """True if the KV pool can host ``n_streams`` more streams."""
+        if self.paged:
+            return self.backend.can_admit(n_streams)
+        return True
+
+    def release_state(self, state: Optional[Dict[str, Any]]) -> None:
+        """Return a finished/closed stream's slab pages (never copies)."""
+        if self.paged:
+            self.backend.release(state)
 
     # ------------------------------------------------------------------
     def _query_embeds(self, S: int) -> jnp.ndarray:
@@ -764,7 +943,9 @@ class ServingPipeline:
         # ---- decode stage ---------------------------------------------
         t0 = time.perf_counter()
         answers, yes_no, caches, f_decode = self.decoder.decode(
-            pr.logits, pr.decode_caches, pr.decode_start, pr.flops_len
+            pr.logits, pr.decode_caches, pr.decode_start, pr.flops_len,
+            page_table=pr.page_table,
+            cache_len=self.cache_slots if pr.page_table is not None else None,
         )
         self.backend.absorb_decode(pr.state, caches)
         t_decode = time.perf_counter() - t0

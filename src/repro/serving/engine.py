@@ -87,6 +87,8 @@ class Engine:
             stats, state = self.serve_window(k, wframes, wmeta, state)
             stats.t_codec += t_codec
             results.append(stats)
+        # paged backends: hand the stream's slab pages back to the pool
+        self.pipeline.release_state(state)
         return results
 
     # ------------------------------------------------------------------

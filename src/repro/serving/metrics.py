@@ -10,7 +10,7 @@ from typing import Dict, Sequence, Tuple
 
 # Ops whose silent oracle fallback erases the paper's FLOP savings —
 # mirrored by the static dispatch auditor in tools/check.
-FALLBACK_OPS = ("flash_refresh", "flash_packed")
+FALLBACK_OPS = ("flash_refresh", "flash_refresh_paged", "flash_packed")
 
 
 def kernel_fallback_delta(

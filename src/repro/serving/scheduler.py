@@ -26,6 +26,7 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .api import ServingPipeline, StreamRequest, StreamSession, WindowResult
 
@@ -37,8 +38,10 @@ def _concat_states(states: List[Dict[str, Any]]) -> Dict[str, Any]:
     """Stack per-session (batch=1) KV states into one batched state.
 
     ``caches`` pytrees carry batch on axis 1 (leading axis is the layer
-    repeat), plain arrays on axis 0; python scalars (e.g. the recurrent
-    ``offset``) must agree across the group.
+    repeat), plain arrays on axis 0; ``pages`` rows are host page
+    indices into the shared slab (paged mode — the KV itself is never
+    copied); python scalars (e.g. the recurrent ``offset``) must agree
+    across the group.
     """
     out: Dict[str, Any] = {}
     for key in states[0]:
@@ -47,6 +50,8 @@ def _concat_states(states: List[Dict[str, Any]]) -> Dict[str, Any]:
             out[key] = jax.tree_util.tree_map(
                 lambda *xs: jnp.concatenate(xs, axis=1), *vals
             )
+        elif key == "pages":
+            out[key] = np.concatenate(vals, axis=0)
         elif isinstance(vals[0], (int, float)):
             assert all(v == vals[0] for v in vals), (key, vals)
             out[key] = vals[0]
@@ -73,6 +78,26 @@ def _split_state(state: Dict[str, Any], n: int) -> List[Dict[str, Any]]:
     return outs
 
 
+def _staged_bytes(state: Optional[Dict[str, Any]]) -> int:
+    """Bytes one session contributes to fused-call state staging.
+
+    Paged sessions carry page indices instead of KV pytrees, so their
+    staged footprint is orders of magnitude below a dense session's —
+    this is what ``WindowStats.t_overhead`` attribution weighs."""
+    if not state:
+        return 0
+    total = 0
+    for key, val in state.items():
+        if key == "caches":
+            total += sum(
+                x.size * x.dtype.itemsize
+                for x in jax.tree_util.tree_leaves(val)
+            )
+        elif hasattr(val, "nbytes"):
+            total += int(val.nbytes)
+    return total
+
+
 # ----------------------------------------------------------------------
 class Scheduler:
     """Admits N concurrent ``StreamSession``s and serves ready windows
@@ -94,6 +119,9 @@ class Scheduler:
         self.pipeline = pipeline
         self.max_concurrent = max_concurrent
         self.max_batch = max_batch or max_concurrent
+        # paged backends: size the shared KV slab for the concurrency
+        # ceiling ONCE — admission below never triggers an allocation
+        pipeline.ensure_capacity(max_concurrent)
         self._queue: deque[StreamSession] = deque()
         self._active: Dict[int, StreamSession] = {}
         self._sessions: Dict[int, StreamSession] = {}
@@ -129,6 +157,7 @@ class Scheduler:
             self._queue.remove(sess)
         except ValueError:
             pass
+        self.pipeline.release_state(sess.state)
         sess.state = None
         return sess.results
 
@@ -140,10 +169,21 @@ class Scheduler:
     def _admit(self) -> None:
         for sid in [s for s, sess in self._active.items() if sess.done]:
             del self._active[sid]
+        # paged backends: an admitted session claims its slab pages on
+        # its first fresh window — count sessions not yet holding pages
+        # and refuse admission the pool cannot back, instead of letting
+        # the fresh call hit PoolExhausted mid-batch
+        n_unbacked = sum(
+            1 for sess in self._active.values()
+            if not (sess.state and "pages" in sess.state)
+        )
         while self._queue and len(self._active) < self.max_concurrent:
+            if not self.pipeline.can_admit(n_unbacked + 1):
+                break                    # wait for a stream to release
             sess = self._queue.popleft()
             if not sess.done:            # zero-window streams finish here
                 self._active[sess.sid] = sess
+                n_unbacked += 1
 
     def _ready_groups(self) -> List[List[StreamSession]]:
         groups: Dict[tuple, List[StreamSession]] = {}
@@ -178,6 +218,8 @@ class Scheduler:
         # groups bypass it — the batch=1 path stays copy-free like the
         # legacy Engine
         fresh = group[0].state is None or not self.pipeline.reuse
+        staged = [_staged_bytes(sess.state) for sess in group]
+        tot_staged = sum(staged)
         t0 = time.perf_counter()
         if fresh:
             state = None
@@ -204,7 +246,11 @@ class Scheduler:
         for i, sess in enumerate(group):
             st = stats[i]
             st.t_codec += t_codecs[i]
-            st.t_overhead += t_stage / len(group)
+            # staging cost is attributed by the KV bytes each stream
+            # actually moved through the fused call, not uniformly —
+            # paged sessions stage page indices, dense ones full caches
+            share = staged[i] / tot_staged if tot_staged else 1 / len(group)
+            st.t_overhead += t_stage * share
             res = WindowResult(sess.request.stream_id, sess.sid,
                                sess.next_window, st)
             sess.results.append(res)
@@ -212,8 +258,13 @@ class Scheduler:
             # completed sessions keep results but release their KV state
             # immediately — KV-cache memory scales with max_concurrent,
             # not with the total number of submitted streams (decoded
-            # frame buffers, by contrast, live from submit-time ingest)
-            sess.state = None if sess.done else per_states[i]
+            # frame buffers, by contrast, live from submit-time ingest);
+            # paged sessions hand their slab pages back to the pool
+            if sess.done:
+                self.pipeline.release_state(per_states[i])
+                sess.state = None
+            else:
+                sess.state = per_states[i]
             results.append(res)
             self.vit_patches += st.vit_patches
             self.vit_slots += st.vit_slots

@@ -581,3 +581,133 @@ def test_guarded_ops_oracle_parity_smoke():
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(ref.rope_shift_ref(kk, d)), atol=1e-5
     )
+
+
+# ----------------------------------------------------------------------
+# paged attention: shared KV slab + per-stream page tables
+# ----------------------------------------------------------------------
+def _paged_case(n_streams, pages_per, h=4, hkv=2, d=32, *, page=128,
+                seed=11, kv_valid_p=0.3):
+    """Random slab + shuffled page tables + ragged logical validity.
+
+    Two spare pages stay un-mapped so the slab holds stale rows no
+    stream owns — the masks, not the allocator, must hide them."""
+    total = n_streams * pages_per + 2
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    slab_k = jax.random.normal(ks[0], (total * page, hkv, d))
+    slab_v = jax.random.normal(ks[1], (total * page, hkv, d))
+    perm = np.random.default_rng(seed).permutation(total)
+    pt = jnp.asarray(
+        perm[: n_streams * pages_per]
+        .reshape(n_streams, pages_per).astype(np.int32))
+    kvv = jax.random.uniform(
+        ks[2], (n_streams, pages_per * page)) > kv_valid_p
+    return slab_k, slab_v, pt, kvv
+
+
+def test_paged_gather_matches_manual_indexing():
+    """paged_gather_ref is a pure reindexing: logical slot s of stream b
+    IS slab row pt[b, s // page] * page + s % page, value-identical."""
+    slab_k, _, pt, _ = _paged_case(3, 2)
+    g = np.asarray(ref.paged_gather_ref(slab_k, pt, 128))
+    slab = np.asarray(slab_k)
+    for b in range(3):
+        for s in (0, 1, 127, 128, 200, 255):
+            phys = int(pt[b, s // 128]) * 128 + s % 128
+            np.testing.assert_array_equal(g[b, s], slab[phys])
+
+
+@pytest.mark.parametrize("pattern", sorted(SCATTER_PATTERNS))
+def test_flash_refresh_paged_matches_ref(pattern):
+    q_pos = SCATTER_PATTERNS[pattern]
+    slab_k, slab_v, pt, kvv = _paged_case(2, 2)
+    ks = jax.random.split(jax.random.PRNGKey(3), 1)
+    q = jax.random.normal(ks[0], (2, len(q_pos), 4, 32))
+    qp = jnp.broadcast_to(jnp.asarray(q_pos)[None], (2, len(q_pos)))
+    bm = build_block_map(q_pos, 256, tq=128, tk=128, causal=True)
+    before = _guard_counts("flash_refresh_paged").get("kernel", 0)
+    with ops.kernel_mode("interpret"):
+        o_k = ops.flash_refresh_paged(
+            q, slab_k, slab_v, qp, kvv, pt, block_map=bm, causal=True)
+    assert _guard_counts("flash_refresh_paged").get("kernel", 0) == before + 1
+    o_r = ref.flash_refresh_paged_ref(
+        q, slab_k, slab_v, qp, kvv, pt, causal=True)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=1e-5)
+
+
+def test_flash_refresh_paged_oracle_bitwise_vs_dense_gather():
+    """The paged oracle path IS the dense path on the gathered logical
+    view — bitwise, not approximately: gather preserves value identity
+    and ordering, so both runs reduce identical operands in identical
+    order."""
+    q_pos = SCATTER_PATTERNS["anchors_tail"]
+    slab_k, slab_v, pt, kvv = _paged_case(2, 2, kv_valid_p=0.4)
+    q = jax.random.normal(jax.random.PRNGKey(5), (2, len(q_pos), 4, 32))
+    qp = jnp.broadcast_to(jnp.asarray(q_pos)[None], (2, len(q_pos)))
+    o_paged = ops.flash_refresh_paged(
+        q, slab_k, slab_v, qp, kvv, pt, causal=True)
+    kg = ref.paged_gather_ref(slab_k, pt, 128)
+    vg = ref.paged_gather_ref(slab_v, pt, 128)
+    o_dense = ops.flash_refresh(q, kg, vg, qp, kvv, causal=True)
+    np.testing.assert_array_equal(np.asarray(o_paged), np.asarray(o_dense))
+
+
+def test_flash_refresh_paged_page_tile_fallback():
+    """A 256-slot page cannot map 1:1 onto 128-wide kv tiles: the
+    page-tile eligibility rule must route to the oracle, counted."""
+    q_pos = np.arange(0, 64, dtype=np.int32)
+    slab_k, slab_v, _, _ = _paged_case(1, 2, seed=13)   # 512 rows
+    pt = jnp.asarray([[0]], jnp.int32)                  # one 256-slot page
+    kvv = jnp.ones((1, 256), bool)
+    q = jax.random.normal(jax.random.PRNGKey(7), (1, 64, 4, 32))
+    qp = jnp.asarray(q_pos)[None]
+    bm = build_block_map(q_pos, 256, tq=128, tk=128, causal=True)
+    before = _guard_counts("flash_refresh_paged").get("guard:page-tile", 0)
+    with ops.kernel_mode("interpret"):
+        out = ops.flash_refresh_paged(
+            q, slab_k, slab_v, qp, kvv, pt, page=256, block_map=bm,
+            causal=True)
+    counts = _guard_counts("flash_refresh_paged")
+    assert counts.get("guard:page-tile", 0) == before + 1
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(ref.flash_refresh_paged_ref(
+            q, slab_k, slab_v, qp, kvv, pt, page=256, causal=True)),
+        atol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("window", [None, 64])
+def test_flash_prefill_paged_matches_ref(window):
+    slab_k, slab_v, pt, _ = _paged_case(2, 2, seed=17)
+    q = jax.random.normal(jax.random.PRNGKey(19), (2, 256, 4, 32))
+    before = _guard_counts("flash_prefill_paged").get("kernel", 0)
+    with ops.kernel_mode("interpret"):
+        o_k = ops.flash_prefill_paged(
+            q, slab_k, slab_v, pt, window=window)
+    assert _guard_counts("flash_prefill_paged").get("kernel", 0) == before + 1
+    o_r = ref.flash_prefill_paged_ref(q, slab_k, slab_v, pt, window=window)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=1e-5)
+
+
+def test_flash_prefill_paged_guard_and_fallback():
+    slab_k, slab_v, pt, _ = _paged_case(1, 2, seed=23)
+    q = jax.random.normal(jax.random.PRNGKey(29), (1, 256, 4, 32))
+    # causal masking is what hides stale rows in recycled pages: a
+    # non-causal paged prefill is a contract violation, not a fallback
+    with pytest.raises(KernelContractError, match="causal"):
+        ops.flash_prefill_paged(q, slab_k, slab_v, pt, causal=False)
+    # unaligned query count: counted eligibility fallback, oracle output
+    q192 = q[:, :192]
+    before = _guard_counts("flash_prefill_paged").get("guard:q-tile", 0)
+    with ops.kernel_mode("interpret"):
+        out = ops.flash_prefill_paged(q192, slab_k, slab_v, pt)
+    assert (
+        _guard_counts("flash_prefill_paged").get("guard:q-tile", 0)
+        == before + 1
+    )
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(ref.flash_prefill_paged_ref(q192, slab_k, slab_v, pt)),
+        atol=1e-6,
+    )

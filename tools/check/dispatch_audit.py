@@ -31,6 +31,7 @@ from repro.configs.base import ViTCfg
 from repro.core.kvc import WindowLayout, refresh_block_map
 from repro.core.pruning import PACK_LEN_BUCKETS, PruneDecision, pack_plan
 from repro.kernels import contracts, ops
+from repro.kernels.flash_refresh import build_block_map
 
 BF16 = "bfloat16"
 F32 = "float32"
@@ -161,6 +162,121 @@ def _refresh_rows(batches: Sequence[int] = (1, 4)) -> List[AuditRow]:
                     (B, bm.n_q, H, D),
                 )
             )
+    return rows
+
+
+#: Paged-attention sweep: stream counts sharing one slab (the pool is
+#: sized for the largest fleet; smaller batches index the same slab —
+#: that is the "ragged occupancy" a paged dispatch must stay eligible
+#: under) and the page size the kernels are tiled for.
+PAGED_FLEETS: Tuple[int, ...] = (1, 4, 8)
+PAGE = 128
+
+
+def _paged_refresh_rows() -> List[AuditRow]:
+    """Every serving refresh geometry must stay kernel-eligible when the
+    KV moves into the shared paged slab: same layouts as
+    ``_refresh_rows``, slab sized for the max fleet, page tables for
+    1/4/8 resident streams.  A 256-slot page against the 128-tile map
+    must be refused by exactly the ``page-tile`` rule."""
+    rows = []
+    H, Hkv, D = ATTN["H"], ATTN["Hkv"], ATTN["D"]
+    for lay, sw in LAYOUTS:
+        need = lay.total_len + MAX_NEW_TOKENS
+        slots = -(-need // KV_TILE) * KV_TILE
+        pps = slots // PAGE
+        phys = max(PAGED_FLEETS) * pps * PAGE     # pool for the max fleet
+        bm = refresh_block_map(lay, window=sw, kv_len=slots)
+        for B in PAGED_FLEETS:
+            q = _sds((B, bm.n_q, H, D), BF16)
+            k = _sds((phys, Hkv, D), BF16)
+            q_pos = _sds((B, bm.n_q), "int32")
+            kvv = _sds((B, slots), "bool")
+            pt = _sds((B, pps), "int32")
+            facts = contracts.flash_refresh_paged_facts(
+                q, k, k, q_pos, kvv, pt, page=PAGE, causal=True,
+                window=sw, block_map=bm, positions_match=lambda: True,
+            )
+            fn = functools.partial(
+                ops.flash_refresh_paged, page=PAGE, causal=True,
+                window=sw, block_map=bm,
+            )
+            rows.append(
+                _run_one(
+                    "flash_refresh_paged",
+                    f"w{lay.window}s{lay.stride}g{lay.gop} "
+                    f"n_q={bm.n_q} kv={slots} sw={sw} B={B} "
+                    f"pages={pps}/{phys // PAGE}",
+                    "kernel",
+                    facts,
+                    lambda q, k, v, p, m, t, _fn=fn: _fn(q, k, v, p, m, t),
+                    (q, k, k, q_pos, kvv, pt),
+                    (B, bm.n_q, H, D),
+                )
+            )
+    # page size != the map's kv tile: the guard must refuse (a visit-
+    # list entry would span two pages) — never silently mis-gather
+    big_bm = build_block_map(np.arange(256, dtype=np.int32), 512)
+    q = _sds((1, 256, H, D), BF16)
+    k = _sds((1024, Hkv, D), BF16)
+    q_pos = _sds((1, 256), "int32")
+    kvv = _sds((1, 512), "bool")
+    pt = _sds((1, 2), "int32")
+    facts = contracts.flash_refresh_paged_facts(
+        q, k, k, q_pos, kvv, pt, page=256, causal=True, window=None,
+        block_map=big_bm, positions_match=lambda: True,
+    )
+    fn = functools.partial(
+        ops.flash_refresh_paged, page=256, causal=True, block_map=big_bm
+    )
+    rows.append(
+        _run_one(
+            "flash_refresh_paged",
+            "page=256 vs tk=128 map",
+            "oracle:page-tile",
+            facts,
+            lambda q, k, v, p, m, t, _fn=fn: _fn(q, k, v, p, m, t),
+            (q, k, k, q_pos, kvv, pt),
+            (1, 256, H, D),
+        )
+    )
+    return rows
+
+
+def _paged_prefill_rows() -> List[AuditRow]:
+    """Paged fresh-prefill geometries: tile-aligned logical windows over
+    slabs of varying occupancy hit the kernel; ragged query lengths are
+    refused by the ``q-tile`` guard."""
+    rows = []
+    H, Hkv, D = ATTN["H"], ATTN["Hkv"], ATTN["D"]
+    cases = (
+        # (B, Sq, pages/stream, phys pages, sliding window, expect)
+        (1, 256, 2, 16, None, "kernel"),
+        (4, 128, 3, 12, None, "kernel"),
+        (8, 256, 2, 16, 4096, "kernel"),
+        (1, 192, 2, 16, None, "oracle:q-tile"),   # ragged: guard refuses
+    )
+    for B, Sq, pps, phys_pages, sw, expect in cases:
+        q = _sds((B, Sq, H, D), BF16)
+        k = _sds((phys_pages * PAGE, Hkv, D), BF16)
+        pt = _sds((B, pps), "int32")
+        facts = contracts.flash_prefill_paged_facts(
+            q, k, k, pt, page=PAGE, causal=True, window=sw, q_offset=0
+        )
+        fn = functools.partial(
+            ops.flash_prefill_paged, page=PAGE, causal=True, window=sw
+        )
+        rows.append(
+            _run_one(
+                "flash_prefill_paged",
+                f"B={B} Sq={Sq} pages={pps}/{phys_pages} sw={sw}",
+                expect,
+                facts,
+                lambda q, k, v, t, _fn=fn: _fn(q, k, v, t),
+                (q, k, k, pt),
+                (B, Sq, H, D),
+            )
+        )
     return rows
 
 
@@ -319,7 +435,8 @@ def _slab_rows() -> List[AuditRow]:
 def run_audit() -> Tuple[List[AuditRow], List[str]]:
     """Returns (all rows, failure strings)."""
     rows = (
-        _refresh_rows() + _packed_rows() + _prefill_rows() + _slab_rows()
+        _refresh_rows() + _paged_refresh_rows() + _packed_rows()
+        + _prefill_rows() + _paged_prefill_rows() + _slab_rows()
     )
     failures = [
         f"{r.op} [{r.geometry}]: {r.failure}" for r in rows if r.failure
