@@ -325,6 +325,11 @@ def _serve_smoke(emit) -> dict:
         out[f"smoke_{mode}_pack_util"] = sched.vit_pack_utilization
         out[f"smoke_{mode}_t_overhead"] = sum(
             s.t_overhead for s in stats) / max(n_windows, 1)
+        lat, ttft = sched.latency_quantiles(), sched.ttft_quantiles()
+        out[f"smoke_{mode}_latency_p50"] = lat.get("p50", 0.0)
+        out[f"smoke_{mode}_latency_p99"] = lat.get("p99", 0.0)
+        out[f"smoke_{mode}_ttft_p50"] = ttft.get("p50", 0.0)
+        out[f"smoke_{mode}_ttft_p99"] = ttft.get("p99", 0.0)
         emit(csv_row(
             f"kernels/smoke_{mode}", 1e6 / max(wps, 1e-9),
             f"windows/s={wps:.2f} refresh/win={refreshed:.0f} "

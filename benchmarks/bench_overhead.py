@@ -75,4 +75,22 @@ def run(emit) -> dict:
         "overhead/kv_staging_paged", paged["t_overhead"] * 1e6,
         f"page-table staging ({out['staging_reduction_x']:.1f}x less "
         f"than concat)"))
+
+    # scheduling overhead of the stage-pipelined async engine vs the
+    # lockstep loop at the same fleet (docs/async_scheduler.md): the
+    # per-window stage times must be unchanged (same math, same
+    # groups), so any t_overhead delta is queue/bookkeeping cost,
+    # while the latency distribution shows what the overlap buys.
+    pipelined = run_mode("codecflow", concurrent=4, paged=True,
+                         pipelined=True)
+    out["t_overhead_async_s"] = pipelined["t_overhead"]
+    out["async_windows_per_s"] = pipelined["windows_per_s"]
+    out["lockstep_windows_per_s"] = paged["windows_per_s"]
+    out["async_latency_p99_s"] = pipelined["window_latency_p99"]
+    out["lockstep_latency_p99_s"] = paged["window_latency_p99"]
+    emit(csv_row(
+        "overhead/async_scheduler", pipelined["t_overhead"] * 1e6,
+        f"windows/s={pipelined['windows_per_s']:.2f} "
+        f"(lockstep {paged['windows_per_s']:.2f}) "
+        f"p99={pipelined['window_latency_p99'] * 1e3:.0f}ms"))
     return out

@@ -1,10 +1,18 @@
-"""Multi-stream scaling: fused-window throughput and KV staging
-overhead as the concurrent fleet grows.
+"""Multi-stream scaling: fused-window throughput, KV staging overhead,
+and the async-vs-lockstep scheduler A/B as the concurrent fleet grows.
 
 Serves the same eval corpus at increasing ``max_concurrent`` with the
 paged slab (page-table staging, ``docs/paged_kv.md``) and with the
 legacy per-stream concat/split path — the t_overhead gap is the KV
 bytes the scheduler no longer moves per fused window.
+
+On the paged leg each fleet size also runs the stage-pipelined async
+scheduler (``docs/async_scheduler.md``) against the lockstep baseline:
+identical per-window answers are ASSERTED (the pipelining is a
+scheduling change, not a numerics change), and at fleet >= 4 the async
+aggregate windows/s must be at least the lockstep scheduler's.  The
+latency distribution (p50/p99 window latency, TTFT) and per-stage
+occupancy of both engines land in the artifact for the nightly upload.
 
 Fleet sizes come from ``STREAM_FLEETS`` (comma-separated, default
 ``1,2,4``); the nightly workflow raises it to stress higher stream
@@ -40,11 +48,48 @@ def run(emit) -> dict:
                 f"windows/s={r['windows_per_s']:.2f} "
                 f"t_overhead={r['t_overhead'] * 1e3:.2f}ms",
             ))
+            if paged:
+                lockstep = r
         # paged and concat must agree on every answer: the slab is an
         # allocation strategy, not an approximation
         assert out[f"s{n}_paged_f1"] == out[f"s{n}_concat_f1"], n
+
         out[f"s{n}_staging_reduction_x"] = (
             out[f"s{n}_concat_t_overhead"]
             / max(out[f"s{n}_paged_t_overhead"], 1e-9)
         )
+
+        # ---- async-vs-lockstep scheduler A/B (paged leg) -------------
+        r_async = run_mode("codecflow", videos=videos, concurrent=n,
+                           paged=True, pipelined=True)
+        # the async engine reorders/fuses WORK, never math: every
+        # stream must produce the identical per-window answer sequence
+        assert r_async["window_answers"] == lockstep["window_answers"], (
+            n, r_async["window_answers"], lockstep["window_answers"])
+        out[f"s{n}_async_windows_per_s"] = r_async["windows_per_s"]
+        out[f"s{n}_lockstep_windows_per_s"] = lockstep["windows_per_s"]
+        for eng, rr in (("async", r_async), ("lockstep", lockstep)):
+            out[f"s{n}_{eng}_latency_p50"] = rr["window_latency_p50"]
+            out[f"s{n}_{eng}_latency_p99"] = rr["window_latency_p99"]
+            out[f"s{n}_{eng}_ttft_p50"] = rr["ttft_p50"]
+            out[f"s{n}_{eng}_ttft_p99"] = rr["ttft_p99"]
+            out[f"s{n}_{eng}_occupancy"] = rr["stage_occupancy"]
+        speedup = (r_async["windows_per_s"]
+                   / max(lockstep["windows_per_s"], 1e-9))
+        out[f"s{n}_async_speedup_x"] = speedup
+        emit(csv_row(
+            f"streams/c{n}_async",
+            1e6 / max(r_async["windows_per_s"], 1e-9),
+            f"windows/s={r_async['windows_per_s']:.2f} "
+            f"vs_lockstep={speedup:.2f}x "
+            f"p99={r_async['window_latency_p99'] * 1e3:.0f}ms",
+        ))
+        if n >= 4:
+            # acceptance: stage overlap must not LOSE throughput once
+            # the fleet is large enough to keep every stage busy
+            assert speedup >= 1.0, (
+                f"async scheduler slower than lockstep at fleet {n}: "
+                f"{r_async['windows_per_s']:.2f} vs "
+                f"{lockstep['windows_per_s']:.2f} windows/s"
+            )
     return out

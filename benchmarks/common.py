@@ -17,8 +17,8 @@ from repro.configs.base import CodecCfg, ModelCfg, ViTCfg
 from repro.data.pipeline import anomaly_dataset
 from repro.data.video import motion_level_spec, generate_video
 from repro.serving import (
-    Engine, EngineCfg, Scheduler, ServingPipeline, StreamRequest,
-    precision_recall_f1, video_prediction,
+    Engine, EngineCfg, KVCfg, Scheduler, SchedulerCfg, ServingPipeline,
+    StreamRequest, precision_recall_f1, video_prediction,
 )
 from repro.training.anomaly_task import train_tiny_vlm
 
@@ -56,7 +56,7 @@ def make_pipeline(mode: str, codec: CodecCfg = CODEC,
     lm_params, vit_params = trained_stack()
     return ServingPipeline(LM, VIT, lm_params, vit_params,
                            EngineCfg(mode=mode, codec=codec,
-                                     paged_kv=paged))
+                                     kv=KVCfg(paged_kv=paged)))
 
 
 def make_engine(mode: str, codec: CodecCfg = CODEC) -> Engine:
@@ -64,7 +64,8 @@ def make_engine(mode: str, codec: CodecCfg = CODEC) -> Engine:
 
 
 def run_mode(mode: str, codec: CodecCfg = CODEC, videos=None,
-             concurrent: int = 1, paged: bool = True) -> Dict:
+             concurrent: int = 1, paged: bool = True,
+             pipelined: bool = False) -> Dict:
     """Aggregate one system variant over the eval corpus.
 
     ``concurrent=1`` (default) serves streams sequentially — per-window
@@ -72,7 +73,11 @@ def run_mode(mode: str, codec: CodecCfg = CODEC, videos=None,
     latency figures.  ``concurrent>1`` admits that many sessions and
     fuses same-phase windows into batched stage calls (throughput mode).
     ``paged=False`` forces the legacy concat/split KV staging (the
-    paged-vs-concat A/B in bench_overhead).
+    paged-vs-concat A/B in bench_overhead).  ``pipelined=True`` runs the
+    stage-pipelined async scheduler instead of the lockstep loop — the
+    default stays lockstep so per-stage wall-clock shares keep the
+    paper-figure serial semantics; the async-vs-lockstep A/B lives in
+    ``bench_streams.py``.
     """
     videos = videos if videos is not None else eval_videos()
     pipeline = make_pipeline(mode, codec, paged=paged)
@@ -84,11 +89,13 @@ def run_mode(mode: str, codec: CodecCfg = CODEC, videos=None,
     eng.run_stream(np.asarray(videos[0][0]))
     wave = min(concurrent, len(videos))
     if wave > 1:
-        warm = Scheduler(pipeline, max_concurrent=wave)
+        warm = Scheduler(pipeline, SchedulerCfg(max_concurrent=wave,
+                                                pipelined=pipelined))
         for i in range(wave):
             warm.submit(StreamRequest(i, np.asarray(videos[0][0])))
         warm.run()
-    sched = Scheduler(pipeline, max_concurrent=concurrent)
+    sched = Scheduler(pipeline, SchedulerCfg(max_concurrent=concurrent,
+                                             pipelined=pipelined))
     t0 = time.perf_counter()
     sids = [sched.submit(StreamRequest(i, np.asarray(frames), tag=label))
             for i, (frames, label) in enumerate(videos)]
@@ -142,6 +149,14 @@ def run_mode(mode: str, codec: CodecCfg = CODEC, videos=None,
         "refreshed_per_window": agg["refreshed"] / w,
         "windows": agg["windows"],
         "windows_per_s": agg["windows"] / max(wall, 1e-9),
+        "scheduler": "pipelined" if pipelined else "lockstep",
+        # serving latency (enqueue->finalize async, group wall lockstep)
+        # and time-to-first-token, from the scheduler's own samples
+        "window_latency_p50": sched.latency_quantiles().get("p50", 0.0),
+        "window_latency_p99": sched.latency_quantiles().get("p99", 0.0),
+        "ttft_p50": sched.ttft_quantiles().get("p50", 0.0),
+        "ttft_p99": sched.ttft_quantiles().get("p99", 0.0),
+        "stage_occupancy": sched.stage_occupancy(),
     }
 
 

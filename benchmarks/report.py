@@ -105,6 +105,14 @@ def ci_summary(r) -> str:
          "{:.2f}"),
         ("fullcomp windows/s (smoke)", "smoke_fullcomp_windows_per_s",
          "{:.2f}"),
+        ("codecflow window latency p50 (smoke)",
+         "smoke_codecflow_latency_p50", "{:.3f} s"),
+        ("codecflow window latency p99 (smoke)",
+         "smoke_codecflow_latency_p99", "{:.3f} s"),
+        ("codecflow TTFT p50 (smoke)", "smoke_codecflow_ttft_p50",
+         "{:.3f} s"),
+        ("codecflow TTFT p99 (smoke)", "smoke_codecflow_ttft_p99",
+         "{:.3f} s"),
     ]:
         v = k.get(key)
         out.append(f"| {label} | {fmt.format(v) if v is not None else '—'} |")
@@ -186,10 +194,17 @@ GATED_METRICS = (
 )
 
 #: Wall-clock metrics: reported in the delta table, never gated (CI
-#: runner noise).  Direction only orients the arrow rendering.
+#: runner noise).  Direction only orients the arrow rendering.  The
+#: latency-quantile / TTFT rows come from the scheduler's own samples
+#: (docs/async_scheduler.md) and stay informational for the same
+#: reason windows/s does.
 INFO_METRICS = (
     ("smoke_codecflow_windows_per_s", "up", "codecflow windows/s"),
     ("smoke_fullcomp_windows_per_s", "up", "fullcomp windows/s"),
+    ("smoke_codecflow_latency_p50", "down", "codecflow window latency p50"),
+    ("smoke_codecflow_latency_p99", "down", "codecflow window latency p99"),
+    ("smoke_codecflow_ttft_p50", "down", "codecflow TTFT p50"),
+    ("smoke_codecflow_ttft_p99", "down", "codecflow TTFT p99"),
     ("smoke_codecflow_t_overhead", "down", "codecflow t_overhead/window"),
     ("smoke_fullcomp_t_overhead", "down", "fullcomp t_overhead/window"),
     ("refresh_dispatch_us", "down", "flash_refresh dispatch us"),

@@ -5,9 +5,12 @@
 The paper's deployment scenario: N concurrent CCTV streams served by one
 stage pipeline behind a batched scheduler.  Each stream is a
 ``StreamSession`` (per-stream codec buffer + KVC state); the scheduler
-interleaves windows in arrival order and fuses ready windows of
-same-phase streams into single batched ViT-encode / prefill / decode
-calls — the production path replacing the per-stream batch=1 loop.
+pipelines stages across streams — codec window slicing on host worker
+threads while the accelerator encodes/prefills earlier groups — and
+fuses ready windows of same-phase streams into single batched
+ViT-encode / prefill / decode calls.  The driver consumes typed
+scheduler events (``StreamAdmitted`` / ``WindowDone`` / ``StreamDone``)
+as they occur instead of polling (docs/async_scheduler.md).
 """
 import argparse
 import time
@@ -18,7 +21,8 @@ from repro.data.pipeline import anomaly_dataset
 from repro.configs.base import CodecCfg
 from repro.launch.serve import build_pipeline
 from repro.serving import (
-    Scheduler, StreamRequest, precision_recall_f1, video_prediction,
+    Scheduler, SchedulerCfg, StreamRequest, StreamDone, WindowDone,
+    precision_recall_f1, video_prediction,
 )
 
 
@@ -36,18 +40,20 @@ def main() -> None:
     pipeline = build_pipeline(args.arch, args.mode, codec)
     streams = anomaly_dataset(args.streams, args.frames, 112, 112, seed=42)
 
-    # session lifecycle: submit (codec ingest) -> poll (batched windows)
-    sched = Scheduler(pipeline, max_concurrent=args.streams)
+    # session lifecycle: submit (codec ingest) -> consume events
+    sched = Scheduler(pipeline, SchedulerCfg(max_concurrent=args.streams))
     t0 = time.time()
     sids = [
         sched.submit(StreamRequest(f"cam-{i}", np.asarray(frames), tag=label))
         for i, (frames, label) in enumerate(streams)
     ]
     total_flops = 0.0
-    while not sched.idle:
-        for res in sched.poll():
-            s = res.stats
+    for ev in sched.events():
+        if isinstance(ev, WindowDone):
+            s = ev.stats
             total_flops += s.flops_vit + s.flops_prefill + s.flops_decode
+        elif isinstance(ev, StreamDone):
+            print(f"  {ev.stream_id}: done after {ev.n_windows} windows")
     wall = time.time() - t0
 
     preds, truths = [], []
@@ -61,6 +67,9 @@ def main() -> None:
     print(f"mode={args.mode} arch={args.arch}")
     print(f"streams={len(sids)} windows={n_windows} wall={wall:.1f}s "
           f"({n_windows / max(wall, 1e-9):.2f} windows/s aggregate)")
+    lat, ttft = sched.latency_quantiles(), sched.ttft_quantiles()
+    print(f"window latency p50={lat.get('p50', 0):.3f}s "
+          f"p99={lat.get('p99', 0):.3f}s  ttft p50={ttft.get('p50', 0):.3f}s")
     print(f"decisions={preds} truths={truths}  P={p:.2f} R={r:.2f} F1={f1:.2f}")
     print(f"total GFLOP={total_flops / 1e9:.2f}")
 

@@ -11,6 +11,13 @@ same-layout streams fused into single batched ViT-encode/prefill calls;
 reports aggregate windows/s across sessions):
 
     PYTHONPATH=src python -m repro.launch.serve --streams 4 --videos 4
+
+By default the stage-pipelined async scheduler overlaps codec window
+slicing with accelerator work and keeps windows of different streams in
+different stages at once (docs/async_scheduler.md); ``--lockstep``
+forces the legacy one-group-per-step loop for A/B comparisons.  The
+summary reports per-stream p50/p99 window latency, TTFT, and per-stage
+occupancy alongside throughput.
 """
 from __future__ import annotations
 
@@ -27,7 +34,8 @@ from ..models import transformer as tfm
 from ..models import vit as vitm
 from ..models.init import ParamBuilder, split_tree
 from ..serving import (
-    Engine, EngineCfg, Scheduler, ServingPipeline, StreamRequest,
+    Engine, EngineCfg, Scheduler, SchedulerCfg, ServingPipeline,
+    StreamRequest, StreamThrottled, WindowDone,
     precision_recall_f1, video_prediction,
 )
 from ..training import checkpoint
@@ -74,6 +82,12 @@ def main() -> None:
     ap.add_argument("--streams", type=int, default=1,
                     help="concurrent sessions admitted by the scheduler; "
                          ">1 batches same-phase windows across streams")
+    ap.add_argument("--lockstep", action="store_true",
+                    help="disable the stage-pipelined async engine (one "
+                         "fused group per step, fully synced)")
+    ap.add_argument("--ingest-workers", type=int, default=2,
+                    help="host threads slicing codec windows while the "
+                         "accelerator runs earlier groups")
     args = ap.parse_args()
 
     codec = CodecCfg(
@@ -83,13 +97,24 @@ def main() -> None:
     pipeline = build_pipeline(args.arch, args.mode, codec, args.ckpt)
     videos = list(anomaly_dataset(args.videos, args.frames, args.hw, args.hw))
 
-    sched = Scheduler(pipeline, max_concurrent=max(1, args.streams))
+    sched = Scheduler(pipeline, SchedulerCfg(
+        max_concurrent=max(1, args.streams),
+        pipelined=not args.lockstep,
+        ingest_workers=args.ingest_workers,
+    ))
     t0 = time.time()
     sids = [
         sched.submit(StreamRequest(i, np.asarray(frames), tag=label))
         for i, (frames, label) in enumerate(videos)
     ]
-    per_session = sched.run()
+    n_throttled = 0
+    for ev in sched.events():
+        if isinstance(ev, StreamThrottled):
+            n_throttled += 1
+        elif isinstance(ev, WindowDone) and ev.window == 0:
+            print(f"# stream {ev.stream_id}: first answer "
+                  f"{ev.stats.answer}")
+    per_session = {sid: sched.session(sid).results for sid in sids}
     wall = time.time() - t0
 
     preds, truths = [], []
@@ -109,9 +134,19 @@ def main() -> None:
             agg["t_overhead"] += s.t_overhead
             agg["windows"] += 1
     p, r, f1 = precision_recall_f1(preds, truths)
+    lat = sched.latency_quantiles()
+    ttft = sched.ttft_quantiles()
     out = {
         "arch": args.arch, "mode": args.mode, "streams": args.streams,
+        "scheduler": "lockstep" if args.lockstep else "pipelined",
         "precision": p, "recall": r, "f1": f1,
+        "window_latency_p50_s": lat.get("p50", 0.0),
+        "window_latency_p99_s": lat.get("p99", 0.0),
+        "ttft_p50_s": ttft.get("p50", 0.0),
+        "ttft_p99_s": ttft.get("p99", 0.0),
+        "stage_occupancy": {k: round(v, 4)
+                            for k, v in sched.stage_occupancy().items()},
+        "streams_throttled": n_throttled,
         "GFLOP_per_window": agg["flops"] / max(agg["windows"], 1) / 1e9,
         "latency_per_window_s": (agg["t_vit"] + agg["t_prefill"]
                                  + agg["t_decode"] + agg["t_overhead"])

@@ -2,22 +2,34 @@ from .api import (
     AttentionPrefill, CodecFrontend, CodecStream, EngineCfg, GreedyDecoder,
     PrefillBackend, PrefillResult, RecurrentPrefill, ServingPipeline,
     StreamRequest, StreamSession, VisualEncoder, WindowResult, WindowStats,
+    DecodePending, EncodedWindows, PrefilledWindows, DecodedWindows,
     MODES, QUERY_IDS, YES, NO,
 )
+from .config import KVCfg, PruneCfg, RefreshCfg, SchedulerCfg
 from .engine import Engine
 from .scheduler import Scheduler
+from .events import (
+    SchedulerError, SchedulerEvent, StreamAdmitted, StreamDone,
+    StreamThrottled, WindowDone,
+)
 from .metrics import precision_recall_f1, video_prediction, agreement
 from . import flops
 
 __all__ = [
     # legacy single-stream surface
     "Engine", "EngineCfg", "WindowStats", "QUERY_IDS", "YES", "NO",
+    # grouped configuration (docs/serving_api.md §Configuration)
+    "PruneCfg", "RefreshCfg", "KVCfg", "SchedulerCfg",
     # session-based multi-stream API
     "ServingPipeline", "Scheduler", "StreamRequest", "StreamSession",
     "WindowResult", "MODES",
+    # scheduler events (docs/async_scheduler.md)
+    "SchedulerEvent", "StreamAdmitted", "StreamThrottled", "WindowDone",
+    "StreamDone", "SchedulerError",
     # stages
     "CodecFrontend", "CodecStream", "VisualEncoder", "PrefillBackend",
     "PrefillResult", "AttentionPrefill", "RecurrentPrefill", "GreedyDecoder",
+    "EncodedWindows", "PrefilledWindows", "DecodedWindows", "DecodePending",
     # metrics
     "precision_recall_f1", "video_prediction", "agreement", "flops",
 ]

@@ -54,8 +54,20 @@ from ..models import transformer as tfm
 from . import metrics
 from ..models import vit as vitm
 from . import flops as flopcount
+from .config import (                       # re-exported; grouped cfgs
+    EngineCfg, KVCfg, PruneCfg, RefreshCfg, SchedulerCfg,
+)
 
 F32 = jnp.float32
+
+
+def _donate(*argnums: int) -> Tuple[int, ...]:
+    """Buffer-donation argnums for jitted calls that thread the paged
+    KV slab functionally (input slab -> output slab): on TPU/GPU the
+    input buffer is reused in place instead of copied every window.
+    CPU does not implement donation (it would only warn), so donation
+    is disabled there."""
+    return argnums if jax.default_backend() != "cpu" else ()
 
 # token conventions for the anomaly-detection workload
 PAD, BOS, YES, NO = 0, 1, 2, 3
@@ -65,25 +77,12 @@ MODES = ("codecflow", "fullcomp", "prune_only", "refresh_only",
          "cacheblend", "vlcache")
 
 
-@dataclasses.dataclass(frozen=True)
-class EngineCfg:
-    mode: str = "codecflow"
-    codec: CodecCfg = CodecCfg()
-    max_new_tokens: int = 1
-    cacheblend_ratio: float = 0.15   # refresh budget for the baseline
-    vlcache_ratio: float = 0.15
-    q_chunk: int = 1024
-    # pruned P-frames: pack kept patch groups across frames/streams into
-    # variable-capacity buffers (docs/vit_packing.md) instead of padding
-    # every frame to the static K_sel capacity
-    packed_vit: bool = True
-    # reuse modes on attention families: per-stream KV lives in a shared
-    # paged slab (core/kv_pool.py, docs/paged_kv.md) — fused windows
-    # stage page tables instead of concatenating caches, stream churn
-    # never copies KV.  ``pool_streams`` pins the pool capacity (in
-    # streams); None sizes it from the scheduler's max_concurrent.
-    paged_kv: bool = True
-    pool_streams: Optional[int] = None
+# EngineCfg and its grouped sub-configs (PruneCfg / RefreshCfg / KVCfg,
+# plus SchedulerCfg for the multi-stream scheduler) live in
+# ``repro.serving.config`` — imported above and re-exported here for
+# compatibility.  Legacy flat kwargs/attributes still work with a
+# DeprecationWarning (docs/serving_api.md §Configuration).
+__cfg_exports = (EngineCfg, PruneCfg, RefreshCfg, KVCfg, SchedulerCfg)
 
 
 @dataclasses.dataclass
@@ -125,7 +124,8 @@ class StreamRequest:
 
 @dataclasses.dataclass(frozen=True)
 class WindowResult:
-    """Per-window outcome delivered by ``Scheduler.poll``."""
+    """Per-window outcome carried by ``WindowDone`` events (and the
+    deprecated ``Scheduler.poll``)."""
 
     stream_id: Any
     session_id: int
@@ -188,12 +188,23 @@ class CodecFrontend:
         dec.ingest(bs, meta)
         return CodecStream(dec, time.perf_counter() - t0, dec.n_windows())
 
+    def window_host(
+        self, cs: CodecStream, k: int
+    ) -> Tuple[np.ndarray, CodecMetadata, float]:
+        """k-th window as HOST arrays: (frames (W, H, Wd), metadata,
+        amortized t_codec).  Pure numpy slicing of the single-pass
+        decode buffer — safe to run on an ingest worker thread while
+        the main thread dispatches device work for earlier windows
+        (the async scheduler's stage-1 surface)."""
+        wframes, wmeta = cs.decoder.window(k)
+        return wframes, wmeta, cs.t_ingest / max(cs.n_windows, 1)
+
     def window(
         self, cs: CodecStream, k: int
     ) -> Tuple[jnp.ndarray, CodecMetadata, float]:
         """k-th window: (frames (W, H, Wd), metadata, amortized t_codec)."""
-        wframes, wmeta = cs.decoder.window(k)
-        return jnp.asarray(wframes), wmeta, cs.t_ingest / max(cs.n_windows, 1)
+        wframes, wmeta, t_codec = self.window_host(cs, k)
+        return jnp.asarray(wframes), wmeta, t_codec
 
 
 # ======================================================================
@@ -436,6 +447,15 @@ class AttentionPrefill:
             return logits, new_caches, h
 
         self._jit_selective = jax.jit(selective)
+        # paged twin donates the input slab: the selective pass threads
+        # the shared KV slab functionally (slab in -> slab out), so on
+        # TPU/GPU XLA updates the pages in place instead of copying the
+        # whole slab per window.  Every call site immediately rebinds
+        # ``pool.slab`` to the output — the donated input is never read
+        # again (docs/async_scheduler.md §Donation).
+        self._jit_selective_paged = jax.jit(
+            selective, donate_argnums=_donate(1)
+        )
 
         # -- paged KV: shared slab + per-stream page tables ------------
         # Reuse modes on the attention family keep per-stream KV in one
@@ -445,13 +465,13 @@ class AttentionPrefill:
         # backend; stream admit/evict only moves page indices.
         assert self.KV_TILE == kv_pool.PAGE_SIZE
         self.paged = bool(
-            ecfg.paged_kv
+            ecfg.kv.paged_kv
             and ecfg.mode in ("codecflow", "refresh_only", "cacheblend",
                               "vlcache")
         )
         self.pages_per_stream = self.cache_slots // self.KV_TILE
         self.pool: Optional[kv_pool.KVPool] = None
-        self._pool_hint = ecfg.pool_streams or 1
+        self._pool_hint = ecfg.kv.pool_streams or 1
         # fresh windows in paged mode go through scatter-mode run_stack
         # (tfm.prefill assumes batched dense caches); their q positions
         # are the full [0, total_len) range, so the visit list is a
@@ -483,11 +503,13 @@ class AttentionPrefill:
             logits = tfm.lm_logits(cfg, params, hn[:, -1])
             return logits, new_caches
 
-        self._jit_paged_fresh = jax.jit(paged_fresh)
+        self._jit_paged_fresh = jax.jit(paged_fresh,
+                                        donate_argnums=_donate(1))
         self._jit_paged_reuse = jax.jit(
             lambda caches, pt: kv_pool.reuse_pool_caches(
                 cfg, caches, pt, layout, self.KV_TILE
-            )
+            ),
+            donate_argnums=_donate(0),
         )
 
     # -- paged pool lifecycle ------------------------------------------
@@ -499,8 +521,8 @@ class AttentionPrefill:
         use (``pool_streams`` pins the capacity instead)."""
         if not self.paged:
             return
-        if self.ecfg.pool_streams is not None:
-            want = self.ecfg.pool_streams
+        if self.ecfg.kv.pool_streams is not None:
+            want = self.ecfg.kv.pool_streams
         else:
             self._pool_hint = max(self._pool_hint, n_streams)
             want = self._pool_hint
@@ -619,7 +641,9 @@ class AttentionPrefill:
             embeds, jnp.asarray(ridx)[None, :, None], axis=1
         )
         rval = jnp.take_along_axis(valid, jnp.asarray(ridx)[None], axis=1)
-        logits, caches, _ = self._jit_selective(
+        jit_selective = (self._jit_selective_paged if self.paged
+                         else self._jit_selective)
+        logits, caches, _ = jit_selective(
             self.params, caches, remb, rval, kvv, jnp.asarray(ridx), pt
         )
         if self.paged:
@@ -657,7 +681,7 @@ class AttentionPrefill:
         tail = np.arange(lay.overlap_tokens, lay.total_len, dtype=np.int32)
         budget = len(lay.anchor_token_idx)
         if mode == "vlcache":
-            r = max(1, int(self.ecfg.vlcache_ratio * lay.overlap_tokens))
+            r = max(1, int(self.ecfg.refresh.vlcache_ratio * lay.overlap_tokens))
             sel = np.linspace(
                 0, lay.overlap_tokens - 1, min(r, budget) or 1
             ).astype(np.int32)
@@ -773,6 +797,18 @@ class RecurrentPrefill:
 # ======================================================================
 # Stage 4: decoder
 # ======================================================================
+class DecodePending(NamedTuple):
+    """In-flight greedy decode: every field except ``flops_decode`` is a
+    device array that has been dispatched but not synced.  Fetching
+    ``answers``/``yes_no`` (``ServingPipeline.finalize_stats``) is the
+    only host sync of a window's serve path."""
+
+    answers: jnp.ndarray         # (S,) device bool: yes-logit > no-logit
+    yes_no: jnp.ndarray          # (S, 2) device last-prefill yes/no logits
+    caches: Any                  # caches after the greedy continuation
+    flops_decode: float
+
+
 class GreedyDecoder:
     """Yes/no answer extraction + greedy continuation, batched."""
 
@@ -794,22 +830,23 @@ class GreedyDecoder:
                 page_table=pt, cache_len=clen,
             ),
             static_argnums=(5,),
+            donate_argnums=_donate(2),
         )
 
-    def decode(self, logits: jnp.ndarray, caches, start_pos: int,
-               flops_len, page_table=None, cache_len: Optional[int] = None,
-               ) -> Tuple[np.ndarray, np.ndarray, Any, float]:
-        """logits: (S, V) last prefill logits.  ``flops_len(i)`` gives
-        the attended context length of decode step i (family-specific).
-        ``page_table`` + ``cache_len`` switch to paged-slab decode.
+    def start(self, logits: jnp.ndarray, caches, start_pos: int,
+              flops_len, page_table=None, cache_len: Optional[int] = None,
+              ) -> "DecodePending":
+        """Dispatch the greedy continuation WITHOUT a host sync.
 
-        Returns (answers (S,), yes_no (S, 2), caches, flops_decode)."""
-        # check: allow-host-sync-under-jit(greedy answer decision is host control flow by design)
-        yes_no = np.asarray(logits[:, (YES, NO)], np.float64)
-        answers = (yes_no[:, 0] > yes_no[:, 1]).astype(np.int64)
-        tok = jnp.asarray(
-            np.where(answers, YES, NO)[:, None], jnp.int32
-        )
+        The yes/no decision and every continuation token are computed
+        on device (``jnp.where`` / ``jnp.argmax``), so this returns as
+        soon as the decode steps are enqueued — the async scheduler
+        keeps dispatching later windows' stages and only fetches the
+        answers when the window's ``WindowDone`` event is finalized
+        (docs/async_scheduler.md §Async dispatch)."""
+        yes_no = logits[:, (YES, NO)]
+        answers = yes_no[:, 0] > yes_no[:, 1]
+        tok = jnp.where(answers, YES, NO)[:, None].astype(jnp.int32)
         f_decode = 0.0
         for i in range(self.max_new_tokens):
             if page_table is not None:
@@ -823,12 +860,56 @@ class GreedyDecoder:
                 )
             tok = jnp.argmax(logits_d, -1)[:, None].astype(jnp.int32)
             f_decode += flopcount.decode_flops(self.cfg, flops_len(i))
-        return answers, yes_no, caches, f_decode
+        return DecodePending(answers, yes_no, caches, f_decode)
+
+    def decode(self, logits: jnp.ndarray, caches, start_pos: int,
+               flops_len, page_table=None, cache_len: Optional[int] = None,
+               ) -> Tuple[np.ndarray, np.ndarray, Any, float]:
+        """Synchronous twin of ``start``: same dispatch, answers fetched
+        before returning.  ``flops_len(i)`` gives the attended context
+        length of decode step i (family-specific); ``page_table`` +
+        ``cache_len`` switch to paged-slab decode.
+
+        Returns (answers (S,), yes_no (S, 2), caches, flops_decode)."""
+        pend = self.start(logits, caches, start_pos, flops_len,
+                          page_table=page_table, cache_len=cache_len)
+        yes_no = np.asarray(pend.yes_no, np.float64)
+        answers = np.asarray(pend.answers).astype(np.int64)
+        return answers, yes_no, pend.caches, pend.flops_decode
 
 
 # ======================================================================
 # Pipeline: stage composition
 # ======================================================================
+class EncodedWindows(NamedTuple):
+    """Output of the encode stage for one fused group of windows."""
+
+    vis: jnp.ndarray             # (S, T, D) visual embeds (dispatched)
+    vval: jnp.ndarray            # (S, T) validity mask
+    qe: jnp.ndarray              # (S, Q, D) query embeds
+    patches: np.ndarray          # (S,) decoded patch counts (host)
+    slots: np.ndarray            # (S,) packed-slot counts (host)
+    fresh: bool
+    t_vit: float
+    fallbacks: int
+
+
+class PrefilledWindows(NamedTuple):
+    """Output of the prefill stage for one fused group of windows."""
+
+    pr: PrefillResult
+    t_prefill: float
+    fallbacks: int
+
+
+class DecodedWindows(NamedTuple):
+    """Output of the decode stage: answers dispatched, not yet synced."""
+
+    pend: DecodePending
+    t_decode: float
+    fallbacks: int
+
+
 class ServingPipeline:
     """Composes the four stages; serves a batch of same-phase windows
     (one per stream) through single jitted stage calls."""
@@ -857,7 +938,7 @@ class ServingPipeline:
 
         self.frontend = CodecFrontend(c)
         self.encoder = VisualEncoder(vit_cfg, params_vit, c, self.layout,
-                                     prune, packed=ecfg.packed_vit)
+                                     prune, packed=ecfg.prune.packed_vit)
         self.backend: PrefillBackend = (
             RecurrentPrefill(cfg, params_lm, self.layout, ecfg)
             if self.is_streaming_family
@@ -903,57 +984,98 @@ class ServingPipeline:
             return ("inc", id(state))     # never batched (cacheblend)
         return ("inc",)
 
-    # ------------------------------------------------------------------
-    def serve_batch(
+    # -- stage surfaces (docs/async_scheduler.md) ----------------------
+    # Each stage takes the previous stage's output and returns as soon
+    # as its device work is DISPATCHED; ``finalize_stats`` is the only
+    # host sync.  ``serve_batch`` composes them back-to-back, so the
+    # lockstep scheduler, the async scheduler, and the batch=1 Engine
+    # all run the exact same stage code (and therefore the exact same
+    # numerics) — they differ only in how stages interleave.
+
+    def encode_windows(
         self,
-        frames: jnp.ndarray,                  # (S, W, H, Wd)
+        frames: jnp.ndarray,                 # (S, W, H, Wd)
         metas: Sequence[CodecMetadata],
-        state: Optional[Dict[str, Any]],      # batched per-stream state
-    ) -> Tuple[List[WindowStats], Dict[str, Any]]:
-        """Serve one window of S same-layout, same-phase streams.
-
-        ``state`` is the batched session state from the previous window
-        (None for the first window of every stream in the batch); modes
-        without reuse treat every window as fresh.  Family differences
-        live entirely behind the ``PrefillBackend`` protocol.
-        """
+        fresh: bool,
+    ) -> EncodedWindows:
+        """Stage 2: ViT-encode one fused group (full window if fresh,
+        last stride otherwise).  Needs no per-stream KV state, so the
+        async scheduler may run it ahead of the previous window's
+        prefill/decode (lookahead)."""
         lay = self.layout
-        S = frames.shape[0]
-        fresh = state is None or not self.reuse
         disp0 = kernel_ops.dispatch_counts()
-
-        # ---- ViT stage ------------------------------------------------
         t0 = time.perf_counter()
         if fresh:
             rng = range(lay.window)
         else:
             rng = range(lay.window - lay.stride, lay.window)
         vis, vval, patches, slots = self.encoder.encode(frames, metas, rng)
-        qe = self._query_embeds(S)
+        qe = self._query_embeds(frames.shape[0])
         t_vit = time.perf_counter() - t0
+        fb = metrics.kernel_fallback_delta(
+            disp0, kernel_ops.dispatch_counts()
+        )
+        return EncodedWindows(vis, vval, qe, patches, slots, fresh,
+                              t_vit, fb)
 
-        # ---- prefill stage --------------------------------------------
+    def prefill_windows(
+        self,
+        enc: EncodedWindows,
+        state: Optional[Dict[str, Any]],     # batched per-stream state
+    ) -> PrefilledWindows:
+        """Stage 3: build/extend LLM context for one fused group.
+        ``state`` is the batched session state from the previous window
+        (None for fresh groups).  Family differences live entirely
+        behind the ``PrefillBackend`` protocol."""
+        disp0 = kernel_ops.dispatch_counts()
         t0 = time.perf_counter()
-        if fresh:
-            pr = self.backend.fresh(vis, vval, qe)
+        if enc.fresh:
+            pr = self.backend.fresh(enc.vis, enc.vval, enc.qe)
         else:
-            pr = self.backend.step(vis, vval, qe, state)
+            pr = self.backend.step(enc.vis, enc.vval, enc.qe, state)
         t_prefill = time.perf_counter() - t0 - pr.t_select
+        fb = metrics.kernel_fallback_delta(
+            disp0, kernel_ops.dispatch_counts()
+        )
+        return PrefilledWindows(pr, t_prefill, fb)
 
-        # ---- decode stage ---------------------------------------------
+    def decode_windows(self, pf: PrefilledWindows) -> DecodedWindows:
+        """Stage 4: dispatch the greedy continuation and fold the decode
+        caches back into the stream state.  No host sync — the answers
+        stay on device until ``finalize_stats``."""
+        pr = pf.pr
+        disp0 = kernel_ops.dispatch_counts()
         t0 = time.perf_counter()
-        answers, yes_no, caches, f_decode = self.decoder.decode(
+        pend = self.decoder.start(
             pr.logits, pr.decode_caches, pr.decode_start, pr.flops_len,
             page_table=pr.page_table,
             cache_len=self.cache_slots if pr.page_table is not None else None,
         )
-        self.backend.absorb_decode(pr.state, caches)
+        self.backend.absorb_decode(pr.state, pend.caches)
         t_decode = time.perf_counter() - t0
-        n_fallback = metrics.kernel_fallback_delta(
+        fb = metrics.kernel_fallback_delta(
             disp0, kernel_ops.dispatch_counts()
         )
+        return DecodedWindows(pend, t_decode, fb)
 
-        stats = [
+    def finalize_stats(
+        self,
+        enc: EncodedWindows,
+        pf: PrefilledWindows,
+        dec: DecodedWindows,
+    ) -> List[WindowStats]:
+        """Stage 5: sync the window's answers off device and assemble
+        per-stream ``WindowStats``.  The sync wall time is charged to
+        the decode share (it is the tail of the decode stream)."""
+        pr, pend = pf.pr, dec.pend
+        S = pend.answers.shape[0]
+        t0 = time.perf_counter()
+        yes_no = np.asarray(pend.yes_no, np.float64)
+        answers = np.asarray(pend.answers).astype(np.int64)
+        t_decode = dec.t_decode + (time.perf_counter() - t0)
+        n_fallback = enc.fallbacks + pf.fallbacks + dec.fallbacks
+        patches, slots = enc.patches, enc.slots
+        return [
             WindowStats(
                 answer=int(answers[i]),
                 logits_yes_no=(float(yes_no[i, 0]), float(yes_no[i, 1])),
@@ -964,11 +1086,27 @@ class ServingPipeline:
                 vit_slots=int(slots[i]),
                 flops_vit=flopcount.vit_flops(self.v, int(patches[i])),
                 flops_prefill=pr.flops,
-                flops_decode=f_decode,
-                t_codec=0.0, t_vit=t_vit / S, t_prefill=t_prefill / S,
+                flops_decode=pend.flops_decode,
+                t_codec=0.0, t_vit=enc.t_vit / S,
+                t_prefill=pf.t_prefill / S,
                 t_decode=t_decode / S, t_overhead=pr.t_select / S,
                 kernel_fallbacks=n_fallback,
             )
             for i in range(S)
         ]
-        return stats, pr.state
+
+    # ------------------------------------------------------------------
+    def serve_batch(
+        self,
+        frames: jnp.ndarray,                  # (S, W, H, Wd)
+        metas: Sequence[CodecMetadata],
+        state: Optional[Dict[str, Any]],      # batched per-stream state
+    ) -> Tuple[List[WindowStats], Dict[str, Any]]:
+        """Serve one window of S same-layout, same-phase streams: the
+        synchronous composition of the four stage surfaces above."""
+        fresh = state is None or not self.reuse
+        enc = self.encode_windows(frames, metas, fresh)
+        pf = self.prefill_windows(enc, state)
+        dec = self.decode_windows(pf)
+        stats = self.finalize_stats(enc, pf, dec)
+        return stats, pf.pr.state

@@ -1,0 +1,239 @@
+"""Stage-pipelined async scheduler (docs/async_scheduler.md).
+
+The pipelined engine reorders and fuses WORK — it must never change
+math.  These tests pin:
+
+  * async == lockstep per-window answers/logits, bitwise, across the
+    reuse families (codecflow / cacheblend) and both KV staging
+    strategies (paged slab / per-stream concat);
+  * the event-ordering contract of ``Scheduler.events()``
+    (StreamAdmitted first, WindowDone in window order, StreamDone
+    exactly once and last);
+  * admission throttling under a pinned KV pool surfaces as
+    ``StreamThrottled`` events while every stream still completes;
+  * ``SchedulerError`` (typed, stream-id-carrying) replaces the bare
+    group-fusion assert;
+  * the config split: grouped ``EngineCfg`` sub-configs with legacy
+    flat kwargs/attrs accepted under ``DeprecationWarning``;
+  * the deprecated ``poll()`` shim still serves every window.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import CodecCfg, ModelCfg, ViTCfg
+from repro.data.video import VideoSpec, generate_video
+from repro.models import transformer as tfm
+from repro.models import vit as vitm
+from repro.models.init import ParamBuilder, split_tree
+from repro.serving import (
+    EngineCfg, KVCfg, Scheduler, SchedulerCfg, SchedulerError,
+    ServingPipeline, StreamAdmitted, StreamDone, StreamRequest,
+    StreamThrottled, WindowDone,
+)
+from repro.serving import config as serving_config
+from repro.serving.scheduler import _concat_states
+
+CODEC = CodecCfg(gop=4, block=16, search_radius=4, window_frames=8,
+                 stride_frames=4, keep_ratio=0.4)
+LM = ModelCfg(name="tiny-vlm", family="vlm", n_layers=2, d_model=64,
+              n_heads=4, n_kv=2, d_ff=128, vocab=64, tied_embeddings=True)
+VIT = ViTCfg(n_layers=2, d_model=64, n_heads=4, d_ff=128, patch=14,
+             image=112, group=2)
+N_STREAMS = 3
+
+
+@pytest.fixture(scope="module")
+def stack():
+    params, _ = tfm.init_params(LM, jax.random.PRNGKey(0))
+    pb = ParamBuilder(jax.random.PRNGKey(1))
+    vparams, _ = split_tree(vitm.init_vit(pb, VIT, LM.d_model))
+    streams = [
+        generate_video(VideoSpec(n_frames=16, height=112, width=112,
+                                 anomaly=bool(i % 2), seed=3 + i))[0]
+        for i in range(N_STREAMS)
+    ]
+    return params, vparams, streams
+
+
+def _pipeline(params, vparams, mode, *, paged, pool_streams=None):
+    return ServingPipeline(
+        LM, VIT, params, vparams,
+        EngineCfg(mode=mode, codec=CODEC,
+                  kv=KVCfg(paged_kv=paged, pool_streams=pool_streams)))
+
+
+def _serve_events(pipe, streams, *, pipelined, max_concurrent=N_STREAMS):
+    """Drive the event loop; returns (per-sid window logits, events)."""
+    sched = Scheduler(pipe, SchedulerCfg(max_concurrent=max_concurrent,
+                                         pipelined=pipelined))
+    sids = [sched.submit(StreamRequest(i, f)) for i, f in enumerate(streams)]
+    events = list(sched.events())
+    answers = {
+        sid: [tuple(np.asarray(r.stats.logits_yes_no).tolist())
+              for r in sched.session(sid).results]
+        for sid in sids
+    }
+    return answers, events
+
+
+# ----------------------------------------------------------------------
+# async == lockstep, bitwise
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["codecflow", "cacheblend"])
+@pytest.mark.parametrize("paged", [True, False],
+                         ids=["paged", "concat"])
+def test_async_matches_lockstep_bitwise(stack, mode, paged):
+    """Same fleet through the pipelined engine and the lockstep loop:
+    every window's yes/no logits must be bit-for-bit identical — stage
+    overlap, continuous batching and deferred syncs are scheduling
+    changes, never numerics changes."""
+    params, vparams, streams = stack
+    pipe = _pipeline(params, vparams, mode, paged=paged)
+    lockstep, _ = _serve_events(pipe, streams, pipelined=False)
+    pipe2 = _pipeline(params, vparams, mode, paged=paged)
+    pipelined, _ = _serve_events(pipe2, streams, pipelined=True)
+    assert pipelined == lockstep
+    if paged:
+        pool = pipe2.backend.pool
+        assert pool is not None and pool.free_pages == pool.n_pages
+
+
+# ----------------------------------------------------------------------
+# event-ordering contract
+# ----------------------------------------------------------------------
+def _check_event_invariants(events, sids, n_windows):
+    by_sid = {sid: [e for e in events if e.sid == sid] for sid in sids}
+    for sid in sids:
+        evs = by_sid[sid]
+        kinds = [type(e).__name__ for e in evs]
+        # admitted before any window/done event (throttles may precede)
+        first_real = next(i for i, e in enumerate(evs)
+                          if not isinstance(e, StreamThrottled))
+        assert isinstance(evs[first_real], StreamAdmitted), kinds
+        # windows arrive strictly in order, no gaps
+        windows = [e.window for e in evs if isinstance(e, WindowDone)]
+        assert windows == list(range(n_windows)), (sid, windows)
+        # exactly one StreamDone, last, with the right count
+        dones = [e for e in evs if isinstance(e, StreamDone)]
+        assert len(dones) == 1 and evs[-1] is dones[0], kinds
+        assert dones[0].n_windows == n_windows
+
+
+@pytest.mark.parametrize("pipelined", [True, False],
+                         ids=["async", "lockstep"])
+def test_event_ordering_invariants(stack, pipelined):
+    params, vparams, streams = stack
+    pipe = _pipeline(params, vparams, "codecflow", paged=True)
+    sched = Scheduler(pipe, SchedulerCfg(max_concurrent=N_STREAMS,
+                                         pipelined=pipelined))
+    sids = [sched.submit(StreamRequest(i, f))
+            for i, f in enumerate(streams)]
+    events = list(sched.events())
+    # 16 frames, window 8, stride 4 -> 3 windows per stream
+    _check_event_invariants(events, sids, n_windows=3)
+
+
+def test_throttle_events_under_pinned_pool(stack):
+    """pool_streams pins KV capacity below the fleet: admission must
+    surface as StreamThrottled (once per episode), every throttled
+    stream must later be admitted, and every stream must finish."""
+    params, vparams, streams = stack
+    pipe = _pipeline(params, vparams, "codecflow", paged=True,
+                     pool_streams=1)
+    sched = Scheduler(pipe, SchedulerCfg(max_concurrent=2, pipelined=True))
+    sids = [sched.submit(StreamRequest(i, f))
+            for i, f in enumerate(streams)]
+    events = list(sched.events())
+    throttled = {e.sid for e in events if isinstance(e, StreamThrottled)}
+    assert throttled, "pinned pool never throttled admission"
+    admitted = {e.sid for e in events if isinstance(e, StreamAdmitted)}
+    assert throttled <= admitted          # throttled is a delay, not a drop
+    done = {e.sid for e in events if isinstance(e, StreamDone)}
+    assert done == set(sids)
+    pool = pipe.backend.pool
+    assert pool.free_pages == pool.n_pages
+
+
+def test_zero_window_stream_emits_done(stack):
+    """A stream shorter than one codec window completes with
+    StreamDone(n_windows=0) instead of hanging the event loop."""
+    params, vparams, _ = stack
+    pipe = _pipeline(params, vparams, "codecflow", paged=True)
+    sched = Scheduler(pipe, SchedulerCfg(max_concurrent=1))
+    short = np.zeros((CODEC.window_frames - 1, 112, 112), np.float32)
+    sid = sched.submit(StreamRequest("short", short))
+    events = list(sched.events())
+    dones = [e for e in events if isinstance(e, StreamDone)]
+    assert len(dones) == 1 and dones[0].sid == sid
+    assert dones[0].n_windows == 0
+
+
+# ----------------------------------------------------------------------
+# typed scheduler errors
+# ----------------------------------------------------------------------
+def test_concat_states_raises_typed_error_with_stream_ids():
+    states = [{"offset": 4}, {"offset": 8}]
+    with pytest.raises(SchedulerError, match="scalar state 'offset'"):
+        _concat_states(states, sids=(7, 9))
+    try:
+        _concat_states(states, sids=(7, 9))
+    except SchedulerError as e:
+        assert e.stream_ids == (7, 9)
+        assert "[streams [7, 9]]" in str(e)
+    # a SchedulerError is still catchable as the old RuntimeError
+    assert issubclass(SchedulerError, RuntimeError)
+
+
+# ----------------------------------------------------------------------
+# config split: grouped sub-configs + legacy flat kwargs/attrs
+# ----------------------------------------------------------------------
+def test_engine_cfg_grouped_fields():
+    cfg = EngineCfg(mode="codecflow", kv=KVCfg(paged_kv=False))
+    assert cfg.kv.paged_kv is False and cfg.kv.pool_streams is None
+    assert cfg.prune.packed_vit is True
+    assert cfg.refresh.cacheblend_ratio == pytest.approx(0.15)
+
+
+def test_engine_cfg_legacy_kwargs_warn_and_map():
+    serving_config._warned_attrs.clear()
+    with pytest.warns(DeprecationWarning, match="EngineCfg.paged_kv"):
+        cfg = EngineCfg(mode="codecflow", paged_kv=False, pool_streams=2)
+    assert cfg.kv.paged_kv is False and cfg.kv.pool_streams == 2
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        EngineCfg(mode="codecflow", not_a_field=1)
+
+
+def test_engine_cfg_legacy_attr_reads_warn():
+    serving_config._warned_attrs.clear()
+    cfg = EngineCfg(mode="codecflow", kv=KVCfg(paged_kv=False))
+    with pytest.warns(DeprecationWarning, match="EngineCfg.paged_kv"):
+        assert cfg.paged_kv is False
+    with pytest.raises(AttributeError):
+        cfg.no_such_field
+
+
+# ----------------------------------------------------------------------
+# deprecated poll() shim
+# ----------------------------------------------------------------------
+def test_poll_shim_serves_everything(stack):
+    params, vparams, streams = stack
+    pipe = _pipeline(params, vparams, "codecflow", paged=True)
+    sched = Scheduler(pipe, SchedulerCfg(max_concurrent=N_STREAMS))
+    sids = [sched.submit(StreamRequest(i, f))
+            for i, f in enumerate(streams)]
+    with pytest.warns(DeprecationWarning, match="poll"):
+        results = []
+        while not sched.idle:
+            results.extend(sched.poll())
+    assert len(results) == 3 * N_STREAMS
+    per_sid = {sid: [r for r in results if r.session_id == sid]
+               for sid in sids}
+    ref = _pipeline(params, vparams, "codecflow", paged=True)
+    expect, _ = _serve_events(ref, streams, pipelined=False)
+    got = {
+        sid: [tuple(np.asarray(r.stats.logits_yes_no).tolist())
+              for r in sorted(per_sid[sid], key=lambda r: r.window)]
+        for sid in sids
+    }
+    assert got == expect

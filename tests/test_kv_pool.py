@@ -20,7 +20,7 @@ from repro.models import transformer as tfm
 from repro.models import vit as vitm
 from repro.models.init import ParamBuilder, split_tree
 from repro.serving import (
-    EngineCfg, Scheduler, ServingPipeline, StreamRequest,
+    EngineCfg, KVCfg, Scheduler, ServingPipeline, StreamRequest,
 )
 from repro.serving.scheduler import _staged_bytes
 
@@ -152,8 +152,8 @@ def stack():
 def _pipeline(params, vparams, mode, *, paged, cfg=LM, pool_streams=None):
     return ServingPipeline(
         cfg, VIT, params, vparams,
-        EngineCfg(mode=mode, codec=CODEC, paged_kv=paged,
-                  pool_streams=pool_streams))
+        EngineCfg(mode=mode, codec=CODEC,
+                  kv=KVCfg(paged_kv=paged, pool_streams=pool_streams)))
 
 
 def _serve(pipe, streams, max_concurrent=N_STREAMS):
