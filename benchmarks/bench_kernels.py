@@ -46,6 +46,12 @@ def _timeit(fn, n=10):
 
 def run(emit) -> dict:
     out = {}
+    # every wall-clock row below is block_until_ready-bracketed on THIS
+    # backend — tag the platform so a CPU-runner number is never read
+    # as a device win in the CI summary or a pasted table
+    out["host_platform"] = jax.default_backend()
+    emit(csv_row("kernels/host_platform", 0.0,
+                 f"wall-clock rows measured on {out['host_platform']}"))
     k = jax.random.PRNGKey(0)
 
     cur = jax.random.uniform(k, (112, 112)) * 255
@@ -159,6 +165,9 @@ def _refresh_attention(emit) -> dict:
     return {
         "refresh_dense_us": us_dense,
         "refresh_dispatch_us": us_new,
+        # measured dense/sparse wall ratio on this host (see
+        # host_platform) — informational next to the exact FLOP ledger
+        "refresh_wall_speedup_x": us_dense / max(us_new, 1e-9),
         "refresh_n_q": nr,
         "refresh_kv_len": S,
         "refresh_block_density": bm.density,
@@ -264,6 +273,7 @@ def _vit_packing(emit) -> dict:
             f"vitpack_{tag}_flops_padded": fl_pad,
             f"vitpack_{tag}_flops_packed": fl_pack,
             f"vitpack_{tag}_flop_speedup": ratio,
+            f"vitpack_{tag}_wall_speedup_x": us_pad / max(us_pack, 1e-9),
         })
     # acceptance gate: the packed path must be >= 1.5x on the exact
     # FLOP ledger at keep_ratio <= 0.5 (the hardware-independent form
@@ -325,6 +335,8 @@ def _serve_smoke(emit) -> dict:
         out[f"smoke_{mode}_pack_util"] = sched.vit_pack_utilization
         out[f"smoke_{mode}_t_overhead"] = sum(
             s.t_overhead for s in stats) / max(n_windows, 1)
+        out[f"smoke_{mode}_kv_bytes_per_stream"] = max(
+            (s.kv_bytes_per_stream for s in stats), default=0)
         lat, ttft = sched.latency_quantiles(), sched.ttft_quantiles()
         out[f"smoke_{mode}_latency_p50"] = lat.get("p50", 0.0)
         out[f"smoke_{mode}_latency_p99"] = lat.get("p99", 0.0)

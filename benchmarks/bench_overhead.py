@@ -76,6 +76,18 @@ def run(emit) -> dict:
         f"page-table staging ({out['staging_reduction_x']:.1f}x less "
         f"than concat)"))
 
+    # steady-state KV memory per resident stream (deterministic byte
+    # count, gated direction-aware in the bench-regression CI step:
+    # lower is better).  The int8 cold-page variant is A/B'd at the
+    # capacity geometry in bench_streams; this row tracks the default
+    # serving config.
+    out["kv_bytes_per_stream"] = paged["kv_bytes_per_stream"]
+    out["kv_slab_bytes"] = paged["kv_slab_bytes"]
+    emit(csv_row(
+        "overhead/kv_bytes_per_stream", 0.0,
+        f"{paged['kv_bytes_per_stream']:,} B/stream "
+        f"(slab {paged['kv_slab_bytes']:,} B at concurrent=4)"))
+
     # scheduling overhead of the stage-pipelined async engine vs the
     # lockstep loop at the same fleet (docs/async_scheduler.md): the
     # per-window stage times must be unchanged (same math, same

@@ -52,11 +52,14 @@ def eval_videos(n: int = 6, n_frames: int = 28, seed: int = 100):
 
 
 def make_pipeline(mode: str, codec: CodecCfg = CODEC,
-                  paged: bool = True) -> ServingPipeline:
+                  paged: bool = True, stale_dtype: str = "bf16",
+                  pool_streams=None) -> ServingPipeline:
     lm_params, vit_params = trained_stack()
-    return ServingPipeline(LM, VIT, lm_params, vit_params,
-                           EngineCfg(mode=mode, codec=codec,
-                                     kv=KVCfg(paged_kv=paged)))
+    return ServingPipeline(
+        LM, VIT, lm_params, vit_params,
+        EngineCfg(mode=mode, codec=codec,
+                  kv=KVCfg(paged_kv=paged, stale_page_dtype=stale_dtype,
+                           pool_streams=pool_streams)))
 
 
 def make_engine(mode: str, codec: CodecCfg = CODEC) -> Engine:
@@ -157,6 +160,10 @@ def run_mode(mode: str, codec: CodecCfg = CODEC, videos=None,
         "ttft_p50": sched.ttft_quantiles().get("p50", 0.0),
         "ttft_p99": sched.ttft_quantiles().get("p99", 0.0),
         "stage_occupancy": sched.stage_occupancy(),
+        # steady-state KV memory: deterministic byte counts (paged slab
+        # share, or the dense per-stream allocation when paged=False)
+        "kv_bytes_per_stream": sched.kv_memory()["bytes_per_stream"],
+        "kv_slab_bytes": sched.kv_memory()["slab_bytes"],
     }
 
 

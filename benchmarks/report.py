@@ -91,7 +91,15 @@ def reproduction_table(r) -> str:
 def ci_summary(r) -> str:
     """Kernel CI step summary: throughput + refresh-attention FLOPs."""
     k = r.get("kernels", {})
+    host = k.get("host_platform", "unknown")
     out = ["## Kernel bench smoke", ""]
+    if host != "tpu":
+        out += [f"wall-clock rows measured on **{host}** — the Pallas "
+                "kernels run their jnp oracles here, so wall numbers "
+                "track the oracle, not device wins; the FLOP/byte "
+                "ledgers below are hardware-independent", ""]
+    else:
+        out += [f"wall-clock rows measured on **{host}**", ""]
     out += ["| metric | value |", "|---|---|"]
     for label, key, fmt in [
         ("mv_sad oracle", "mv_sad", "{:.0f} us"),
@@ -101,6 +109,8 @@ def ci_summary(r) -> str:
         ("refresh attn, dense-mask path", "refresh_dense_us", "{:.0f} us"),
         ("refresh attn, flash_refresh dispatch", "refresh_dispatch_us",
          "{:.0f} us"),
+        (f"refresh dense/sparse wall speedup ({host})",
+         "refresh_wall_speedup_x", "{:.2f}x"),
         ("codecflow windows/s (smoke)", "smoke_codecflow_windows_per_s",
          "{:.2f}"),
         ("fullcomp windows/s (smoke)", "smoke_fullcomp_windows_per_s",
@@ -113,6 +123,8 @@ def ci_summary(r) -> str:
          "{:.3f} s"),
         ("codecflow TTFT p99 (smoke)", "smoke_codecflow_ttft_p99",
          "{:.3f} s"),
+        ("codecflow KV bytes/stream (smoke)",
+         "smoke_codecflow_kv_bytes_per_stream", "{:,.0f} B"),
     ]:
         v = k.get(key)
         out.append(f"| {label} | {fmt.format(v) if v is not None else '—'} |")
@@ -125,9 +137,9 @@ def ci_summary(r) -> str:
             f"{fb_n} fallback{flag} |"
         )
     out += ["", "### Packed ViT encode (padded vs packed pruned path)", ""]
-    out += ["| keep_ratio | padded patches/s | packed patches/s | "
-            "FLOPs saved | buffer fill |",
-            "|---|---|---|---|---|"]
+    out += [f"| keep_ratio | padded patches/s | packed patches/s | "
+            f"wall speedup ({host}) | FLOPs saved | buffer fill |",
+            "|---|---|---|---|---|---|"]
     any_pack = False
     for tag in ("0.5", "0.25"):
         pps_pad = k.get(f"vitpack_{tag}_padded_patches_s")
@@ -138,8 +150,10 @@ def ci_summary(r) -> str:
         if None in (pps_pad, pps_pack, fd, fp, fill):
             continue
         any_pack = True
+        wall = k.get(f"vitpack_{tag}_wall_speedup_x")
         out.append(
             f"| {tag} | {pps_pad:,.0f} | {pps_pack:,.0f} | "
+            f"{'—' if wall is None else f'{wall:.2f}x'} | "
             f"**{100 * (1 - fp / fd):.0f}%** ({fd / fp:.2f}x) | "
             f"{100 * fill:.0f}% |"
         )
@@ -155,7 +169,7 @@ def ci_summary(r) -> str:
             f"(`docs/vit_packing.md`)"
         )
     else:
-        out.append("| (vit packing section missing from JSON) | | | | |")
+        out.append("| (vit packing section missing from JSON) | | | | | |")
     out += ["", "### Refresh-attention block sparsity", ""]
     out += ["| | dense | block-sparse |", "|---|---|---|"]
     tiles_t, tiles_v = k.get("refresh_tiles_total"), k.get("refresh_tiles_visited")
@@ -174,23 +188,45 @@ def ci_summary(r) -> str:
         )
     else:
         out.append("| (refresh section missing from JSON) | | |")
+    st = r.get("streams", {})
+    if isinstance(st, dict) and "quant_capacity_ratio" in st:
+        out += ["", "### Int8 cold-page KV capacity (fixed slab bytes)", ""]
+        out += ["| | bf16 | int8 cold pages |", "|---|---|---|"]
+        out.append(f"| streams admitted | {st.get('bf16_streams', '—')} | "
+                   f"{st.get('quant_streams', '—')} |")
+        out.append(f"| bytes/stream | {st.get('bf16_bytes_per_stream', 0):,} "
+                   f"| {st.get('quant_bytes_per_stream', 0):,} |")
+        out.append(
+            f"| | | **{st['quant_capacity_ratio']:.2f}x** (gate: >= 1.7x) |")
+        err = st.get("quant_max_logit_err")
+        out.append("")
+        out.append(
+            f"answers identical across precisions: "
+            f"{st.get('quant_answers_equal', '—')}; max abs logit error "
+            f"{'—' if err is None else f'{err:.4f}'} (`docs/paged_kv.md`)")
     return "\n".join(out)
 
 
 # ----------------------------------------------------------------------
 # bench-regression gate (CI --compare mode)
 # ----------------------------------------------------------------------
-#: Deterministic FLOP-ledger metrics under ``["kernels"]``: any >10%
-#: regression fails the job.  Direction "down" = smaller is better.
+#: Deterministic FLOP/byte-ledger metrics: any >10% regression fails the
+#: job.  Direction "down" = smaller is better.  Keys default to the
+#: ``["kernels"]`` section; a ``section/key`` form reads another bench's
+#: output (e.g. the stream-capacity ratio under ``["streams"]``).
 GATED_METRICS = (
     ("smoke_codecflow_flops_prefill", "down", "codecflow prefill FLOPs"),
     ("smoke_fullcomp_flops_prefill", "down", "fullcomp prefill FLOPs"),
     ("smoke_codecflow_refreshed_per_window", "down",
      "refreshed tokens / window"),
+    ("smoke_codecflow_kv_bytes_per_stream", "down",
+     "codecflow KV bytes/stream"),
     ("refresh_flops_sparse", "down", "refresh attn FLOPs (block-sparse)"),
     ("refresh_tiles_visited", "down", "refresh kv tiles visited"),
     ("vitpack_min_flop_speedup", "up", "ViT packing FLOP speedup"),
     ("dispatch_fallback_decisions", "down", "silent kernel fallbacks"),
+    ("streams/quant_capacity_ratio", "up",
+     "int8 cold-page stream capacity ratio"),
 )
 
 #: Wall-clock metrics: reported in the delta table, never gated (CI
@@ -199,6 +235,9 @@ GATED_METRICS = (
 #: (docs/async_scheduler.md) and stay informational for the same
 #: reason windows/s does.
 INFO_METRICS = (
+    ("refresh_wall_speedup_x", "up", "refresh dense/sparse wall speedup"),
+    ("vitpack_0.5_wall_speedup_x", "up", "ViT pack wall speedup (keep 0.5)"),
+    ("vitpack_0.25_wall_speedup_x", "up", "ViT pack wall speedup (keep 0.25)"),
     ("smoke_codecflow_windows_per_s", "up", "codecflow windows/s"),
     ("smoke_fullcomp_windows_per_s", "up", "fullcomp windows/s"),
     ("smoke_codecflow_latency_p50", "down", "codecflow window latency p50"),
@@ -224,12 +263,23 @@ def _rel_regression(base: float, cur: float, direction: str) -> float:
     return d if direction == "down" else -d
 
 
+def _metric(r: dict, key: str):
+    """Gate-key lookup: bare keys read ``["kernels"]``; ``section/key``
+    reads another bench section of the results JSON."""
+    section, _, name = key.rpartition("/")
+    sec = r.get(section or "kernels")
+    return sec.get(name) if isinstance(sec, dict) else None
+
+
 def compare(base: dict, cur: dict,
             threshold: float = REGRESSION_THRESHOLD):
     """Returns (markdown report, list of gate-failure strings)."""
-    kb, kc = base.get("kernels", {}), cur.get("kernels", {})
     failures = []
+    host_b = _metric(base, "host_platform")
+    host_c = _metric(cur, "host_platform")
     out = ["## Bench regression vs baseline", "",
+           f"wall-clock rows: baseline on **{host_b or 'unknown'}**, "
+           f"current on **{host_c or 'unknown'}** — never gated", "",
            "| metric | baseline | current | delta | gate |",
            "|---|---|---|---|---|"]
 
@@ -240,7 +290,7 @@ def compare(base: dict, cur: dict,
 
     for key, direction, label in GATED_METRICS + INFO_METRICS:
         gated = (key, direction, label) in GATED_METRICS
-        b, c = kb.get(key), kc.get(key)
+        b, c = _metric(base, key), _metric(cur, key)
         if b is None or c is None:
             out.append(f"| {label} | {fmt(b)} | {fmt(c)} | — | "
                        f"{'skipped (missing)' if gated else 'info'} |")

@@ -36,7 +36,13 @@ import numpy as np
 from ..configs.base import ModelCfg
 from ..kernels import ops
 from ..models import transformer as tfm
-from ..models.layers import KVCache
+from ..models.layers import (
+    KVCache,
+    QuantKVCache,
+    dequantize_kv,
+    page_quant_scale,
+    quantize_kv,
+)
 from .kvc import WindowLayout
 
 #: Page size in KV slots.  Fixed at the kernel KV tile (128) so each kv
@@ -60,10 +66,21 @@ def logical_to_physical(
 class KVPool:
     """Fixed-size paged KV slab with a LIFO free list.
 
-    All state mutation (``admit`` / ``evict``) is host-side numpy; the
-    device-resident ``slab`` (a ``tfm.Caches`` with batchless leaves) is
-    functionally updated by the jitted serving calls and stored back by
-    the caller (``AttentionPrefill``).
+    All state mutation (``admit`` / ``evict`` / ``demote``) is host-side
+    numpy; the device-resident ``slab`` (a ``tfm.Caches`` with batchless
+    leaves) is functionally updated by the jitted serving calls and
+    stored back by the caller (``AttentionPrefill``).
+
+    With ``cold_pages > 0`` the slab is two-precision
+    (:class:`QuantKVCache` blocks): ``n_pages`` hot float pages plus
+    ``cold_pages`` int8 cold pages with per-page-per-head f32 scales.
+    Page ids share ONE space — ids ``[0, n_pages)`` are hot, ids
+    ``[n_pages, n_pages + cold_pages)`` are cold (cold-slab page
+    ``id - n_pages``) — so a page-table entry carries its own precision
+    bit and the free lists stay per-precision.  Cold capacity is
+    *reserved* at admission (``cold_per_stream``) and consumed by
+    ``demote``, so an admitted stream can always demote its overlap
+    pages even under churn.
     """
 
     def __init__(
@@ -72,6 +89,7 @@ class KVPool:
         n_pages: int,
         page: int = PAGE_SIZE,
         dtype=jnp.bfloat16,
+        cold_pages: int = 0,
     ) -> None:
         for pos in range(cfg.period):
             mixer, _ = cfg.block_kind(pos)
@@ -82,16 +100,35 @@ class KVPool:
         self.cfg = cfg
         self.page = page
         self.n_pages = n_pages
+        self.n_cold = cold_pages
         shape = (cfg.repeats, n_pages * page, cfg.n_kv, cfg.d_head)
-        blocks = tuple(
-            KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
-            for _ in range(cfg.period)
-        )
+        if cold_pages:
+            cold_shape = (cfg.repeats, cold_pages * page, cfg.n_kv, cfg.d_head)
+            scale_shape = (cfg.repeats, cold_pages, cfg.n_kv)
+            blocks = tuple(
+                QuantKVCache(
+                    jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                    jnp.zeros(cold_shape, jnp.int8),
+                    jnp.zeros(cold_shape, jnp.int8),
+                    jnp.ones(scale_shape, jnp.float32),
+                    jnp.ones(scale_shape, jnp.float32),
+                )
+                for _ in range(cfg.period)
+            )
+        else:
+            blocks = tuple(
+                KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+                for _ in range(cfg.period)
+            )
         self.slab: tfm.Caches = tfm.Caches(blocks, None)
         # LIFO: recently-evicted pages are re-admitted first (tested as
         # "page-table reuse after evict")
         self._free: list = list(range(n_pages - 1, -1, -1))
+        self._free_cold: list = list(
+            range(n_pages + cold_pages - 1, n_pages - 1, -1)
+        )
         self._in_use: set = set()
+        self._reserved_cold = 0
 
     # -- free-list accounting ------------------------------------------
     @property
@@ -99,11 +136,25 @@ class KVPool:
         return len(self._free)
 
     @property
+    def free_cold_pages(self) -> int:
+        return len(self._free_cold)
+
+    @property
     def used_pages(self) -> int:
         return len(self._in_use)
 
     def can_admit(self, n_pages: int) -> bool:
         return n_pages <= len(self._free)
+
+    def can_admit_streams(
+        self, n_streams: int, pages_per_stream: int, cold_per_stream: int = 0
+    ) -> bool:
+        """Stream-aware admission check: hot pages now, plus a cold
+        reservation that guarantees the demote pass never stalls."""
+        if n_streams * pages_per_stream > len(self._free):
+            return False
+        need_cold = self._reserved_cold + n_streams * cold_per_stream
+        return need_cold <= len(self._free_cold)
 
     def admit(self, n_pages: int) -> np.ndarray:
         """Pop ``n_pages`` page ids; raises :class:`PoolExhausted` when
@@ -117,17 +168,94 @@ class KVPool:
         self._in_use.update(pages)
         return np.asarray(pages, np.int32)
 
-    def admit_streams(self, n_streams: int, pages_per_stream: int) -> np.ndarray:
-        """Admit ``n_streams`` streams at once -> (S, pages_per_stream)."""
+    def admit_streams(
+        self,
+        n_streams: int,
+        pages_per_stream: int,
+        cold_per_stream: int = 0,
+    ) -> np.ndarray:
+        """Admit ``n_streams`` streams at once -> (S, pages_per_stream).
+
+        Streams are admitted all-hot; ``cold_per_stream`` reserves cold
+        pages each stream will consume at its first demote window.
+        """
+        need_cold = self._reserved_cold + n_streams * cold_per_stream
+        if need_cold > len(self._free_cold):
+            raise PoolExhausted(
+                f"need {need_cold} reserved cold pages, "
+                f"{len(self._free_cold)} free of {self.n_cold}"
+            )
         pages = self.admit(n_streams * pages_per_stream)
+        self._reserved_cold = need_cold
         return pages.reshape(n_streams, pages_per_stream)
 
+    def demote(self, hot_ids) -> np.ndarray:
+        """Move pages hot -> cold: frees the hot ids, pops one cold id
+        each (consuming the admission-time reservation), and returns the
+        unified cold ids (``>= n_pages``) for the caller's page table.
+        The KV content move is the caller's jitted
+        :func:`demote_pool_caches` pass."""
+        ids = np.asarray(hot_ids, np.int64).ravel().tolist()
+        if len(ids) > len(self._free_cold):
+            raise PoolExhausted(
+                f"need {len(ids)} cold pages, {len(self._free_cold)} "
+                f"free of {self.n_cold}"
+            )
+        cold = []
+        for p in ids:
+            assert p < self.n_pages, f"page {p} is already cold"
+            assert p in self._in_use, f"demote of free page {p}"
+            self._in_use.discard(p)
+            self._free.append(p)
+            c = self._free_cold.pop()
+            self._in_use.add(c)
+            cold.append(c)
+        self._reserved_cold = max(0, self._reserved_cold - len(ids))
+        return np.asarray(cold, np.int32)
+
+    def unreserve_cold(self, n_pages: int) -> None:
+        """Release an admission-time cold reservation (stream evicted
+        before it ever demoted)."""
+        self._reserved_cold = max(0, self._reserved_cold - n_pages)
+
     def evict(self, pages) -> None:
-        """Return a stream's pages to the free list (no KV copy)."""
+        """Return a stream's pages to their free lists (no KV copy)."""
         for p in np.asarray(pages, np.int64).ravel().tolist():
             assert p in self._in_use, f"double free of page {p}"
             self._in_use.discard(p)
-            self._free.append(p)
+            (self._free_cold if p >= self.n_pages else self._free).append(p)
+
+    # -- memory observability ------------------------------------------
+    @property
+    def slab_bytes(self) -> int:
+        """Total device bytes of the slab (all precisions + scales)."""
+        return sum(
+            leaf.size * leaf.dtype.itemsize
+            for blk in self.slab.blocks
+            for leaf in blk
+        )
+
+    def page_bytes(self, cold: bool = False) -> int:
+        """Bytes one page costs across every layer (scales included)."""
+        per = 0
+        for blk in self.slab.blocks:
+            if cold:
+                assert isinstance(blk, QuantKVCache), "pool has no cold slab"
+                per += (blk.k8.size + blk.v8.size) // self.n_cold \
+                    * blk.k8.dtype.itemsize
+                per += (blk.k_scale.size + blk.v_scale.size) // self.n_cold \
+                    * blk.k_scale.dtype.itemsize
+            else:
+                per += (blk.k.size + blk.v.size) // self.n_pages \
+                    * blk.k.dtype.itemsize
+        return per
+
+    def bytes_per_stream(self, hot_pages: int, cold_pages: int = 0) -> int:
+        """Steady-state slab bytes one stream occupies."""
+        per = hot_pages * self.page_bytes()
+        if cold_pages:
+            per += cold_pages * self.page_bytes(cold=True)
+        return per
 
 
 def gather_pages(
@@ -145,6 +273,62 @@ def gather_pages(
     return jnp.take(leaf, rows, axis=leaf.ndim - 3)
 
 
+def demotable_pages(layout: WindowLayout, page: int = PAGE_SIZE) -> np.ndarray:
+    """Page indices (within a stream's row) eligible for int8 demotion.
+
+    Exactly the pages fully contained in the overlap
+    ``[0, overlap_tokens)``.  This set is layout-static and
+    mode-independent: every paged reuse mode rewrites those logical
+    slots from the previous window's overlap each step, and the refresh
+    pass overwrites every anchor slot *before* any attention read — so
+    between windows the page content is either carried overlap (stale,
+    quantization-tolerant) or dead anchor rows about to be rewritten.
+    The tail (shift + query + decode slots) stays hot.
+    """
+    return np.arange(layout.overlap_tokens // page, dtype=np.int64)
+
+
+def demote_pool_caches(
+    caches: tfm.Caches,
+    src_pages: jnp.ndarray,
+    dst_pages: jnp.ndarray,
+    page: int = PAGE_SIZE,
+) -> tfm.Caches:
+    """Codec-guided demotion: quantize hot pages into cold slots.
+
+    src_pages: (B, n_d) int32 hot page ids whose content demotes;
+    dst_pages: (B, n_d) int32 unified cold ids (``>= n_hot``) freshly
+    popped by :meth:`KVPool.demote`.  Per page and kv head a symmetric
+    scale is computed from the page's amax (``page_quant_scale``), so
+    the demoted content rounds through int8 exactly once.  The hot
+    slab is left untouched (the freed pages are recycled by admission,
+    which fully rewrites them).  Callers jit this with a donated slab.
+    """
+    B, n_d = src_pages.shape
+    off = jnp.arange(page, dtype=jnp.int32)
+    src_rows = (src_pages[:, :, None] * page + off).reshape(B, n_d * page)
+    new_blocks = []
+    for blk in caches.blocks:
+        assert isinstance(blk, QuantKVCache), "demote needs a quant slab"
+        R, _, n_kv, dh = blk.k.shape
+        n_hot = blk.k.shape[1] // page
+        cold_pg = dst_pages - n_hot                     # (B, n_d)
+        dst_rows = (cold_pg[:, :, None] * page + off).reshape(B, n_d * page)
+
+        def _quant(hot, slab8, scales):
+            over = hot[:, src_rows]                     # (R, B, n_d*page, ...)
+            over = over.reshape(R, B, n_d, page, n_kv, dh)
+            sc = page_quant_scale(over, (3, 5))         # (R, B, n_d, n_kv)
+            q = quantize_kv(over, sc[:, :, :, None, :])
+            q = q.reshape(R, B, n_d * page, n_kv, dh)
+            return slab8.at[:, dst_rows].set(q), scales.at[:, cold_pg].set(sc)
+
+        k8, ksc = _quant(blk.k, blk.k8, blk.k_scale)
+        v8, vsc = _quant(blk.v, blk.v8, blk.v_scale)
+        new_blocks.append(QuantKVCache(blk.k, blk.v, k8, v8, ksc, vsc))
+    return tfm.Caches(tuple(new_blocks), caches.cross)
+
+
 def reuse_pool_caches(
     cfg: ModelCfg,
     caches: tfm.Caches,
@@ -160,26 +344,97 @@ def reuse_pool_caches(
     move) keeps source and destination pages from aliasing; operand
     shapes fed to ``rope_shift`` match the dense ``shift_cache`` path
     exactly, so the rotated keys are bitwise identical.
+
+    On a two-precision slab (``QuantKVCache`` blocks) the gather is
+    precision-routed: cold source rows dequantize through the storage
+    dtype, the rotation runs in f32 as usual, and destination pages
+    fully contained in the overlap requantize with *fresh* scales —
+    the rope-shift correction on a demoted page therefore rounds
+    through int8 exactly once per window, never twice.
     """
     sh, ov, vl = layout.shift_tokens, layout.overlap_tokens, layout.vis_len
     src = jnp.arange(sh, vl, dtype=jnp.int32)
     dst = jnp.arange(0, ov, dtype=jnp.int32)
-    phys_src = logical_to_physical(page_table, src, page)  # (B, ov)
-    phys_dst = logical_to_physical(page_table, dst, page)
     B = page_table.shape[0]
+    if not isinstance(caches.blocks[0], QuantKVCache):
+        phys_src = logical_to_physical(page_table, src, page)  # (B, ov)
+        phys_dst = logical_to_physical(page_table, dst, page)
+        new_blocks = []
+        for blk in caches.blocks:
+            R = blk.k.shape[0]
+            k_over = blk.k[:, phys_src]  # (R, B, ov, n_kv, d_head)
+            v_over = blk.v[:, phys_src]
+            flat_k = k_over.reshape((R * B,) + k_over.shape[2:])
+            delta = jnp.full((R * B, ov), -sh, jnp.int32)
+            k_corr = ops.rope_shift(flat_k, delta, cfg.rope_theta)
+            k_corr = k_corr.reshape(k_over.shape).astype(blk.k.dtype)
+            new_blocks.append(KVCache(
+                blk.k.at[:, phys_dst].set(k_corr),
+                blk.v.at[:, phys_dst].set(v_over),
+            ))
+        return tfm.Caches(tuple(new_blocks), caches.cross)
+
+    # -- two-precision slab --------------------------------------------
+    n_hot = caches.blocks[0].k.shape[1] // page
+    n_cold = caches.blocks[0].k8.shape[1] // page
+    off = jnp.arange(page, dtype=jnp.int32)
+    src_entries = page_table[:, src // page]            # (B, ov)
+    src_is_cold = src_entries >= n_hot
+    phys_src_hot = jnp.minimum(src_entries, n_hot - 1) * page + src % page
+    src_cold_pg = jnp.clip(src_entries - n_hot, 0, n_cold - 1)
+    phys_src_cold = src_cold_pg * page + src % page
+    # hot-destination scatter rows: cold entries map past the hot slab
+    # and mode="drop" discards them
+    phys_dst = page_table[:, dst // page] * page + dst % page
+    # destination pages fully inside the overlap — the demotable set
+    n_full = ov // page
+    dst_entries_full = page_table[:, :n_full]           # (B, n_full)
+    dst_is_cold = dst_entries_full >= n_hot
+    dst_cold_pg = jnp.clip(dst_entries_full - n_hot, 0, n_cold - 1)
+    cold_rows = jnp.where(
+        dst_is_cold[:, :, None],
+        dst_cold_pg[:, :, None] * page + off,
+        n_cold * page,                                  # OOB -> dropped
+    ).reshape(B, n_full * page)
+    scale_pg = jnp.where(dst_is_cold, dst_cold_pg, n_cold)  # OOB when hot
+
     new_blocks = []
     for blk in caches.blocks:
-        R = blk.k.shape[0]
-        k_over = blk.k[:, phys_src]  # (R, B, ov, n_kv, d_head)
-        v_over = blk.v[:, phys_src]
+        R, _, n_kv, dh = blk.k.shape
+
+        def _gather(hot, cold8, scales):
+            gh = hot[:, phys_src_hot]                   # (R, B, ov, ...)
+            gc = cold8[:, phys_src_cold]
+            sc = scales[:, src_cold_pg]                 # (R, B, ov, n_kv)
+            deq = dequantize_kv(gc, sc, hot.dtype)
+            return jnp.where(src_is_cold[None, :, :, None, None], deq, gh)
+
+        k_over = _gather(blk.k, blk.k8, blk.k_scale)
+        v_over = _gather(blk.v, blk.v8, blk.v_scale)
         flat_k = k_over.reshape((R * B,) + k_over.shape[2:])
         delta = jnp.full((R * B, ov), -sh, jnp.int32)
         k_corr = ops.rope_shift(flat_k, delta, cfg.rope_theta)
         k_corr = k_corr.reshape(k_over.shape).astype(blk.k.dtype)
-        new_blocks.append(KVCache(
-            blk.k.at[:, phys_dst].set(k_corr),
-            blk.v.at[:, phys_dst].set(v_over),
-        ))
+
+        k_hot = blk.k.at[:, phys_dst].set(k_corr, mode="drop")
+        v_hot = blk.v.at[:, phys_dst].set(v_over, mode="drop")
+        if n_full:
+            def _requant(vals, slab8, scales):
+                full = vals[:, :, : n_full * page]
+                full = full.reshape(R, B, n_full, page, n_kv, dh)
+                sc = page_quant_scale(full, (3, 5))     # (R, B, n_full, n_kv)
+                q = quantize_kv(full, sc[:, :, :, None, :])
+                q = q.reshape(R, B, n_full * page, n_kv, dh)
+                return (
+                    slab8.at[:, cold_rows].set(q, mode="drop"),
+                    scales.at[:, scale_pg].set(sc, mode="drop"),
+                )
+
+            k8, ksc = _requant(k_corr, blk.k8, blk.k_scale)
+            v8, vsc = _requant(v_over, blk.v8, blk.v_scale)
+        else:
+            k8, ksc, v8, vsc = blk.k8, blk.k_scale, blk.v8, blk.v_scale
+        new_blocks.append(QuantKVCache(k_hot, v_hot, k8, v8, ksc, vsc))
     return tfm.Caches(tuple(new_blocks), caches.cross)
 
 
@@ -193,6 +448,8 @@ __all__ = [
     "PAGE_SIZE",
     "KVPool",
     "PoolExhausted",
+    "demotable_pages",
+    "demote_pool_caches",
     "gather_pages",
     "logical_to_physical",
     "pool_pages_needed",

@@ -183,10 +183,34 @@ def flash_refresh_facts(
     return facts
 
 
+def _cold_facts(cold, *, page: int) -> dict:
+    """Facts for the optional int8 cold-page operand group.
+
+    ``cold`` is None (single-precision slab) or a
+    ``(k8, v8, k_scale, v_scale)`` tuple: (Pc_phys, Hkv, D) int8 slabs
+    plus (n_cold, Hkv) f32 per-page-per-head dequant scales.
+    """
+    if cold is None:
+        return {"has_cold": False}
+    k8, v8, k_scale, v_scale = cold
+    return {
+        "has_cold": True,
+        "cold_k_shape": tuple(k8.shape),
+        "cold_v_shape": tuple(v8.shape),
+        "cold_k_dtype": _dt(k8),
+        "cold_v_dtype": _dt(v8),
+        "k_scale_shape": tuple(k_scale.shape),
+        "v_scale_shape": tuple(v_scale.shape),
+        "k_scale_dtype": _dt(k_scale),
+        "v_scale_dtype": _dt(v_scale),
+    }
+
+
 def flash_refresh_paged_facts(
     q, k, v, q_pos, kv_valid, page_table, *, page: int, causal: bool,
     window, block_map,
     positions_match: Callable[[], bool] = lambda: True,
+    cold=None,
 ) -> dict:
     """Facts for the paged refresh op.  ``k``/``v`` are the batchless
     (P_phys, Hkv, D) slab; the logical KV length is derived from the
@@ -215,6 +239,7 @@ def flash_refresh_paged_facts(
         "has_map": block_map is not None,
         "positions_match": positions_match,
     }
+    facts.update(_cold_facts(cold, page=page))
     if block_map is not None:
         facts.update(
             map_n_q=block_map.n_q,
@@ -228,10 +253,11 @@ def flash_refresh_paged_facts(
 
 
 def flash_prefill_paged_facts(
-    q, k, v, page_table, *, page: int, causal: bool, window, q_offset: int
+    q, k, v, page_table, *, page: int, causal: bool, window, q_offset: int,
+    cold=None,
 ) -> dict:
     pt_shape = tuple(page_table.shape)
-    return {
+    facts = {
         "q_shape": tuple(q.shape),
         "k_shape": tuple(k.shape),
         "v_shape": tuple(v.shape),
@@ -248,6 +274,8 @@ def flash_prefill_paged_facts(
         "window": window,
         "q_offset": int(q_offset),
     }
+    facts.update(_cold_facts(cold, page=page))
+    return facts
 
 
 def flash_packed_facts(
@@ -295,6 +323,62 @@ def _attn_dtype_ok(f: Mapping[str, Any]) -> bool:
         and f["k_dtype"] in ADMISSIBLE_FLOAT
         and f["k_dtype"] == f["v_dtype"]
     )
+
+
+# Rules for the optional int8 cold-page operand group on the paged ops.
+# Every clause is vacuous when no cold group is supplied, so the plain
+# single-precision slab keeps its exact pre-quantization contract.
+_COLD_PRECONDITIONS = (
+    Rule(
+        "cold-kv-shape",
+        "cold k8 and v8 are rank-3 slabs with identical shapes",
+        lambda f: not f["has_cold"]
+        or (
+            len(f["cold_k_shape"]) == 3
+            and f["cold_k_shape"] == f["cold_v_shape"]
+        ),
+    ),
+    Rule(
+        "cold-align",
+        "cold slab row count divides by the page size",
+        lambda f: not f["has_cold"]
+        or f["cold_k_shape"][0] % f["page"] == 0,
+    ),
+    Rule(
+        "cold-head",
+        "cold slab matches the hot slab's (Hkv, D) trailing dims",
+        lambda f: not f["has_cold"]
+        or f["cold_k_shape"][1:] == f["k_shape"][1:],
+    ),
+    Rule(
+        "scale-shape",
+        "k/v scales are (n_cold, Hkv) per-page-per-head",
+        lambda f: not f["has_cold"]
+        or (
+            f["k_scale_shape"]
+            == (f["cold_k_shape"][0] // f["page"], f["cold_k_shape"][1])
+            and f["k_scale_shape"] == f["v_scale_shape"]
+        ),
+    ),
+)
+
+_COLD_ELIGIBILITY = (
+    Rule(
+        "cold-dtype",
+        "fused dequant kernel requires int8 cold pages",
+        lambda f: not f["has_cold"]
+        or (f["cold_k_dtype"] == "int8" and f["cold_v_dtype"] == "int8"),
+    ),
+    Rule(
+        "scale-f32",
+        "fused dequant kernel requires f32 scales (the oracle casts)",
+        lambda f: not f["has_cold"]
+        or (
+            f["k_scale_dtype"] == "float32"
+            and f["v_scale_dtype"] == "float32"
+        ),
+    ),
+)
 
 
 MV_SAD = KernelContract(
@@ -599,7 +683,7 @@ FLASH_REFRESH_PAGED = KernelContract(
             == (f["q_shape"][0], f["logical_len"])
             and f["kv_valid_dtype"] == "bool",
         ),
-    ),
+    ) + _COLD_PRECONDITIONS,
     eligibility=(
         Rule("map-present", "a RefreshBlockMap was supplied", lambda f: f["has_map"]),
         Rule(
@@ -633,12 +717,13 @@ FLASH_REFRESH_PAGED = KernelContract(
             "concrete q_pos equals the map's positions (traced: trusted)",
             lambda f: f["positions_match"](),
         ),
-    ),
+    ) + _COLD_ELIGIBILITY,
     tile=(128, 128),
     visit_list=(
         "tile_ids (n_q_tiles, t_max) + tile_count (n_q_tiles,) int32 in "
         "logical tile coordinates, plus page_table (B, n_pages) int32 — "
-        "all scalar-prefetched; the BlockSpec index map composes them: "
+        "all scalar-prefetched (with (n_cold, Hkv) f32 k/v scales when a "
+        "cold group rides along); the BlockSpec index map composes them: "
         "kv tile = pt[b, tile_ids[iq, it]]"
     ),
     compile_key=(
@@ -710,7 +795,7 @@ FLASH_PREFILL_PAGED = KernelContract(
             "sliding window is None or >= 1",
             lambda f: f["window"] is None or f["window"] >= 1,
         ),
-    ),
+    ) + _COLD_PRECONDITIONS,
     eligibility=(
         Rule("q-tile", "Sq divides by Tq=128", lambda f: f["q_shape"][1] % 128 == 0),
         Rule(
@@ -718,7 +803,7 @@ FLASH_PREFILL_PAGED = KernelContract(
             "page size equals the key tile Tk=128",
             lambda f: f["page"] == 128,
         ),
-    ),
+    ) + _COLD_ELIGIBILITY,
     tile=(128, 128),
     visit_list=(
         "page_table (B, n_pages) int32, scalar-prefetched; the key-axis "

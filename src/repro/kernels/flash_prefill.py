@@ -182,6 +182,74 @@ def _flash_paged_kernel(
         o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
 
 
+def _flash_paged_quant_kernel(
+    pt_ref, ks_ref, vs_ref,                  # scalar-prefetch (SMEM)
+    q_ref, kh_ref, kc_ref, vh_ref, vc_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, tq: int, tk: int, n_k: int, scale: float, causal: bool,
+    window: int | None, q_offset: int, n_hot: int, n_cold: int, g: int,
+):
+    """Two-precision twin of ``_flash_paged_kernel``.
+
+    Page-table entries >= n_hot address the int8 cold slab (cold page
+    ``entry - n_hot``); both candidate tiles are DMA'd per grid step and
+    the cold one dequantizes in-register (``int8 * scale`` rounded
+    through the hot storage dtype) before the f32 QK^T — no materialized
+    bf16 copy.  ``ks/vs`` are (n_cold, Hkv) f32 scales in SMEM.
+    """
+    b = pl.program_id(0)
+    kvh = pl.program_id(1) // g
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    entry = pt_ref[b, ik]
+    is_cold = entry >= n_hot
+    ci = jnp.clip(entry - n_hot, 0, n_cold - 1)
+    q = q_ref[0, 0].astype(jnp.float32) * scale       # (Tq, D)
+    kh = kh_ref[0]                                    # (Tk, D) hot page
+    kc = kc_ref[0]                                    # (Tk, D) int8 page
+    k_deq = (kc.astype(jnp.float32) * ks_ref[ci, kvh]).astype(kh.dtype)
+    k = jnp.where(is_cold, k_deq, kh).astype(jnp.float32)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    qpos = iq * tq + jax.lax.iota(jnp.int32, tq)[:, None] + q_offset
+    kpos = ik * tk + jax.lax.iota(jnp.int32, tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(logits, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(logits - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    vh = vh_ref[0]
+    vc = vc_ref[0]
+    v_deq = (vc.astype(jnp.float32) * vs_ref[ci, kvh]).astype(vh.dtype)
+    v = jnp.where(is_cold, v_deq, vh).astype(jnp.float32)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("page", "causal", "window", "q_offset", "tq", "tk",
@@ -200,6 +268,7 @@ def flash_prefill_paged_pallas(
     tq: int = 128,
     tk: int = 128,
     interpret: bool = False,
+    cold=None,
 ):
     """Paged causal GQA attention over the shared KV slab.
 
@@ -210,6 +279,10 @@ def flash_prefill_paged_pallas(
     prefill writes logical slots [0, Sq) before reading, so any stale
     previous-tenant rows sit strictly in the causal future and are
     masked; there is no ``kv_valid`` operand on this path.
+
+    ``cold`` is an optional ``(k8, v8, k_scale, v_scale)`` int8
+    cold-page group (see ``flash_refresh_paged_pallas``); when None this
+    traces exactly the single-precision kernel.
     """
     B, Sq, H, D = q.shape
     P_phys, Hkv, _ = k.shape
@@ -224,6 +297,58 @@ def flash_prefill_paged_pallas(
     qt = q.transpose(0, 2, 1, 3)                      # (B, H, Sq, D)
     kt = k.transpose(1, 0, 2)                         # (Hkv, P_phys, D)
     vt = v.transpose(1, 0, 2)
+
+    if cold is not None:
+        k8, v8, k_scale, v_scale = cold
+        n_hot = P_phys // page
+        Pc_phys = k8.shape[0]
+        assert Pc_phys % page == 0, (Pc_phys, page)
+        n_cold = Pc_phys // page
+        k8t = k8.transpose(1, 0, 2)                   # (Hkv, Pc_phys, D)
+        v8t = v8.transpose(1, 0, 2)
+
+        def _hot_map(b, h, iq, ik, pt, ks, vs):
+            return (h // g, jnp.minimum(pt[b, ik], n_hot - 1), 0)
+
+        def _cold_map(b, h, iq, ik, pt, ks, vs):
+            return (h // g, jnp.clip(pt[b, ik] - n_hot, 0, n_cold - 1), 0)
+
+        kernel = functools.partial(
+            _flash_paged_quant_kernel, tq=tq, tk=tk, n_k=n_k, scale=scale,
+            causal=causal, window=window, q_offset=q_offset,
+            n_hot=n_hot, n_cold=n_cold, g=g,
+        )
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(B, H, Sq // tq, n_k),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, 1, tq, D),
+                    lambda b, h, iq, ik, pt, ks, vs: (b, h, iq, 0),
+                ),
+                pl.BlockSpec((1, tk, D), _hot_map),
+                pl.BlockSpec((1, tk, D), _cold_map),
+                pl.BlockSpec((1, tk, D), _hot_map),
+                pl.BlockSpec((1, tk, D), _cold_map),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, tq, D), lambda b, h, iq, ik, pt, ks, vs: (b, h, iq, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((tq, 1), jnp.float32),
+                pltpu.VMEM((tq, 1), jnp.float32),
+                pltpu.VMEM((tq, D), jnp.float32),
+            ],
+        )
+        out = pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+            interpret=interpret,
+        )(page_table.astype(jnp.int32),
+          k_scale.astype(jnp.float32), v_scale.astype(jnp.float32),
+          qt, kt, k8t, vt, v8t)
+        return out.transpose(0, 2, 1, 3)
 
     kernel = functools.partial(
         _flash_paged_kernel, tq=tq, tk=tk, n_k=n_k, scale=scale,

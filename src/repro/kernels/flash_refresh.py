@@ -377,6 +377,80 @@ def _refresh_paged_kernel(
         ).astype(o_ref.dtype)
 
 
+def _refresh_paged_quant_kernel(
+    ids_ref, cnt_ref, pt_ref, ks_ref, vs_ref,  # scalar-prefetch (SMEM)
+    q_ref, qpos_ref, kh_ref, kc_ref, vh_ref, vc_ref, kvm_ref,  # VMEM tiles
+    o_ref, m_ref, l_ref, acc_ref,
+    *, tk: int, t_max: int, scale: float, causal: bool, window: int | None,
+    n_hot: int, n_cold: int, g: int,
+):
+    """Two-precision twin of ``_refresh_paged_kernel``.
+
+    The page table carries the precision bit: entry < n_hot is a hot
+    (float) page, entry >= n_hot is cold page ``entry - n_hot`` in the
+    int8 slab.  Both candidate tiles are DMA'd per grid step (clamped
+    index maps keep the dead one in-bounds); the kernel selects one and
+    dequantizes the cold tile in-register — ``int8 * scale`` rounded
+    through the hot storage dtype, so the fused path matches the
+    gather-dequant oracle bitwise — before the f32 QK^T.  ``ks/vs`` are
+    per-(cold-page, kv-head) f32 scales prefetched to SMEM.
+    """
+    b = pl.program_id(0)
+    kvh = pl.program_id(1) // g
+    iq = pl.program_id(2)
+    it = pl.program_id(3)
+
+    @pl.when(it == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(it < cnt_ref[iq])
+    def _compute():
+        kid = ids_ref[iq, it]
+        entry = pt_ref[b, kid]
+        is_cold = entry >= n_hot
+        ci = jnp.clip(entry - n_hot, 0, n_cold - 1)
+        q = q_ref[0, 0].astype(jnp.float32) * scale     # (Tq, D)
+        kh = kh_ref[0]                                  # (Tk, D) hot page
+        kc = kc_ref[0]                                  # (Tk, D) int8 page
+        k_deq = (kc.astype(jnp.float32) * ks_ref[ci, kvh]).astype(kh.dtype)
+        k = jnp.where(is_cold, k_deq, kh).astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        qp = qpos_ref[0][:, None]
+        kp = kid * tk + jax.lax.iota(jnp.int32, tk)[None, :]
+        mask = kvm_ref[0, 0][None, :] != 0
+        if causal:
+            mask &= kp <= qp
+        if window is not None:
+            mask &= kp > qp - window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(logits - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        vh = vh_ref[0]
+        vc = vc_ref[0]
+        v_deq = (vc.astype(jnp.float32) * vs_ref[ci, kvh]).astype(vh.dtype)
+        v = jnp.where(is_cold, v_deq, vh).astype(jnp.float32)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = m_new
+
+    @pl.when(it == t_max - 1)
+    def _finish():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("page", "causal", "window", "tq", "tk", "interpret"),
@@ -397,6 +471,7 @@ def flash_refresh_paged_pallas(
     tq: int = 128,
     tk: int = 128,
     interpret: bool = False,
+    cold=None,
 ):
     """Paged ``flash_refresh_pallas``: KV lives in one shared slab.
 
@@ -410,6 +485,12 @@ def flash_refresh_paged_pallas(
       page_table: (B, n_pages) int32 per-stream page table; entry ``p``
         maps logical tile ``p`` to slab rows [pt*page, (pt+1)*page).
       tile_ids / tile_count: logical visit list (``RefreshBlockMap``).
+      cold: optional ``(k8, v8, k_scale, v_scale)`` int8 cold-page group:
+        (Pc_phys, Hkv, D) int8 slabs + (n_cold, Hkv) f32 scales.  When
+        present, page-table entries >= n_hot select dequantized cold
+        tiles (``_refresh_paged_quant_kernel``); when None this function
+        traces *exactly* the single-precision kernel — the bf16 control
+        stays bitwise identical.
 
     Requires tk == page so one visit-list entry is one slab page (the
     "page-tile" eligibility rule).  Returns (B, Sq, H, D).
@@ -432,6 +513,69 @@ def flash_refresh_paged_pallas(
     vt = v.transpose(1, 0, 2)
     qp2 = q_pos.astype(jnp.int32).reshape(n_q_tiles, tq)
     kvm = kv_valid.astype(jnp.int32).reshape(B, n_pages, tk)
+
+    if cold is not None:
+        k8, v8, k_scale, v_scale = cold
+        n_hot = P_phys // page
+        Pc_phys = k8.shape[0]
+        assert Pc_phys % page == 0, (Pc_phys, page)
+        n_cold = Pc_phys // page
+        k8t = k8.transpose(1, 0, 2)                   # (Hkv, Pc_phys, D)
+        v8t = v8.transpose(1, 0, 2)
+
+        def _hot_map(b, h, iq, it, ids, cnt, pt, ks, vs):
+            return (h // g, jnp.minimum(pt[b, ids[iq, it]], n_hot - 1), 0)
+
+        def _cold_map(b, h, iq, it, ids, cnt, pt, ks, vs):
+            return (h // g,
+                    jnp.clip(pt[b, ids[iq, it]] - n_hot, 0, n_cold - 1), 0)
+
+        kernel = functools.partial(
+            _refresh_paged_quant_kernel, tk=tk, t_max=t_max, scale=scale,
+            causal=causal, window=window, n_hot=n_hot, n_cold=n_cold, g=g,
+        )
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=(B, H, n_q_tiles, t_max),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, 1, tq, D),
+                    lambda b, h, iq, it, ids, cnt, pt, ks, vs: (b, h, iq, 0),
+                ),
+                pl.BlockSpec(
+                    (1, tq),
+                    lambda b, h, iq, it, ids, cnt, pt, ks, vs: (iq, 0),
+                ),
+                pl.BlockSpec((1, tk, D), _hot_map),
+                pl.BlockSpec((1, tk, D), _cold_map),
+                pl.BlockSpec((1, tk, D), _hot_map),
+                pl.BlockSpec((1, tk, D), _cold_map),
+                pl.BlockSpec(
+                    (1, 1, tk),
+                    lambda b, h, iq, it, ids, cnt, pt, ks, vs:
+                        (b, ids[iq, it], 0),
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, tq, D),
+                lambda b, h, iq, it, ids, cnt, pt, ks, vs: (b, h, iq, 0),
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((tq, 1), jnp.float32),
+                pltpu.VMEM((tq, 1), jnp.float32),
+                pltpu.VMEM((tq, D), jnp.float32),
+            ],
+        )
+        out = pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+            interpret=interpret,
+        )(tile_ids.astype(jnp.int32), tile_count.astype(jnp.int32),
+          page_table.astype(jnp.int32),
+          k_scale.astype(jnp.float32), v_scale.astype(jnp.float32),
+          qt, qp2, kt, k8t, vt, v8t, kvm)
+        return out.transpose(0, 2, 1, 3)
 
     kernel = functools.partial(
         _refresh_paged_kernel, tk=tk, t_max=t_max, scale=scale,

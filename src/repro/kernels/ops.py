@@ -252,6 +252,7 @@ def flash_refresh_paged(
     window: int | None = None,
     block_map: RefreshBlockMap | None = None,
     q_chunk: int = 1024,
+    cold=None,
 ):
     """Paged ``flash_refresh``: KV lives in one shared batchless slab.
 
@@ -261,11 +262,18 @@ def flash_refresh_paged(
     (B, n_pages) int32.  The block map stays in logical coordinates —
     the kernel composes it with the page table per grid step, so the
     same lru-cached per-``WindowLayout`` map serves every stream mix.
+
+    ``cold`` is an optional ``(k8, v8, k_scale, v_scale)`` int8
+    cold-page operand group: page-table entries >= n_hot address cold
+    page ``entry - n_hot`` and dequantize in-register (kernel) or via
+    ``paged_gather_quant_ref`` (oracle) — both round through the hot
+    storage dtype, so the paths agree.
     """
     facts = contracts.flash_refresh_paged_facts(
         q, k, v, q_pos, kv_valid, page_table, page=page, causal=causal,
         window=window, block_map=block_map,
         positions_match=lambda: _positions_match_map(q_pos, block_map),
+        cold=cold,
     )
     contracts.validate("flash_refresh_paged", facts)
     use, interp = _use_pallas()
@@ -281,12 +289,11 @@ def flash_refresh_paged(
             qq, k, v, qp, kv_valid, page_table,
             jnp.asarray(bm.tile_ids), jnp.asarray(bm.tile_count),
             page=page, causal=causal, window=window, tq=bm.tq, tk=bm.tk,
-            interpret=interp,
+            interpret=interp, cold=cold,
         )
         return out[:, :Sq]
     # oracle: materialize the logical view once, reuse the chunked path
-    kg = ref.paged_gather_ref(k, page_table, page)
-    vg = ref.paged_gather_ref(v, page_table, page)
+    kg, vg = ref._paged_gather(k, v, page_table, page, cold)
     return _flash_refresh_ref_chunked(
         q, kg, vg, q_pos, kv_valid, causal=causal, window=window,
         q_chunk=q_chunk,
@@ -303,13 +310,15 @@ def flash_prefill_paged(
     causal: bool = True,
     window: int | None = None,
     q_offset: int = 0,
+    cold=None,
 ):
     """Paged ``flash_prefill``: q (B, Sq, H, D) against the shared slab
     k, v (P_phys, Hkv, D) through page_table (B, n_pages) int32.  Causal
-    only — the mask is what hides stale rows in recycled pages."""
+    only — the mask is what hides stale rows in recycled pages.  ``cold``
+    is the optional int8 cold-page group (see ``flash_refresh_paged``)."""
     facts = contracts.flash_prefill_paged_facts(
         q, k, v, page_table, page=page, causal=causal, window=window,
-        q_offset=q_offset,
+        q_offset=q_offset, cold=cold,
     )
     contracts.validate("flash_prefill_paged", facts)
     use, interp = _use_pallas()
@@ -318,11 +327,11 @@ def flash_prefill_paged(
     if use and dec.use_kernel:
         return flash_prefill_paged_pallas(
             q, k, v, page_table, page=page, causal=causal, window=window,
-            q_offset=q_offset, interpret=interp,
+            q_offset=q_offset, interpret=interp, cold=cold,
         )
     return ref.flash_prefill_paged_ref(
         q, k, v, page_table, page=page, causal=causal, window=window,
-        q_offset=q_offset,
+        q_offset=q_offset, cold=cold,
     )
 
 

@@ -212,6 +212,52 @@ def paged_gather_ref(
     return slab[rows.reshape(B, n_pages * page)]
 
 
+def paged_gather_quant_ref(
+    hot: jnp.ndarray,
+    cold: jnp.ndarray,
+    scale: jnp.ndarray,
+    page_table: jnp.ndarray,
+    page: int,
+) -> jnp.ndarray:
+    """Materialize logical KV from a two-precision (hot bf16 / cold int8) slab.
+
+    hot:  (n_hot * page, Hkv, D) float rows; cold: (n_cold * page, Hkv, D)
+    int8 rows; scale: (n_cold, Hkv) f32 per-page-per-head dequant scales.
+    Page ids share one space: ``entry < n_hot`` indexes the hot slab,
+    ``entry >= n_hot`` indexes cold page ``entry - n_hot``.  Cold rows
+    dequantize symmetrically (``value = int8 * scale``) and round through
+    the hot storage dtype — the exact value the fused kernel path feeds
+    to QK^T, so oracle and kernel agree bitwise on dequantized content.
+    """
+    B, n_pages = page_table.shape
+    n_hot = hot.shape[0] // page
+    n_cold = cold.shape[0] // page
+    entries = page_table  # (B, n_pages)
+    is_cold = entries >= n_hot
+    hot_pg = jnp.minimum(entries, n_hot - 1)
+    cold_pg = jnp.clip(entries - n_hot, 0, n_cold - 1)
+    off = jnp.arange(page)[None, None, :]
+    hot_rows = (hot_pg[:, :, None] * page + off).reshape(B, n_pages * page)
+    cold_rows = (cold_pg[:, :, None] * page + off).reshape(B, n_pages * page)
+    gh = hot[hot_rows]                                  # (B, S, Hkv, D)
+    gc = cold[cold_rows]
+    sc = scale.astype(jnp.float32)[cold_pg]             # (B, n_pages, Hkv)
+    sc = jnp.repeat(sc, page, axis=1)                   # (B, S, Hkv)
+    deq = (gc.astype(jnp.float32) * sc[..., None]).astype(hot.dtype)
+    mask = jnp.repeat(is_cold, page, axis=1)            # (B, S)
+    return jnp.where(mask[:, :, None, None], deq, gh)
+
+
+def _paged_gather(k, v, page_table, page, cold):
+    """Gather logical K/V from a plain or two-precision slab."""
+    if cold is None:
+        return (paged_gather_ref(k, page_table, page),
+                paged_gather_ref(v, page_table, page))
+    k8, v8, k_scale, v_scale = cold
+    return (paged_gather_quant_ref(k, k8, k_scale, page_table, page),
+            paged_gather_quant_ref(v, v8, v_scale, page_table, page))
+
+
 def flash_refresh_paged_ref(
     q: jnp.ndarray,
     k: jnp.ndarray,
@@ -224,14 +270,17 @@ def flash_refresh_paged_ref(
     causal: bool = True,
     window: int | None = None,
     scale: float | None = None,
+    cold=None,
 ):
     """Oracle for the paged refresh kernel: gather + ``flash_refresh_ref``.
 
     k, v are the batchless (P_phys, Hkv, D) slab; everything else is in
     logical per-stream coordinates (see ``flash_refresh_paged_pallas``).
+    ``cold`` is an optional ``(k8, v8, k_scale, v_scale)`` int8 cold-page
+    operand group; when present, page-table entries ``>= n_hot`` gather
+    from it with dequantization (see ``paged_gather_quant_ref``).
     """
-    kg = paged_gather_ref(k, page_table, page)
-    vg = paged_gather_ref(v, page_table, page)
+    kg, vg = _paged_gather(k, v, page_table, page, cold)
     return flash_refresh_ref(
         q, kg, vg, q_pos, kv_valid, causal=causal, window=window, scale=scale
     )
@@ -248,10 +297,10 @@ def flash_prefill_paged_ref(
     window: int | None = None,
     q_offset: int = 0,
     scale: float | None = None,
+    cold=None,
 ):
     """Oracle for the paged prefill kernel: gather + ``flash_prefill_ref``."""
-    kg = paged_gather_ref(k, page_table, page)
-    vg = paged_gather_ref(v, page_table, page)
+    kg, vg = _paged_gather(k, v, page_table, page, cold)
     return flash_prefill_ref(
         q, kg, vg, causal=causal, window=window, q_offset=q_offset,
         scale=scale,

@@ -34,7 +34,7 @@ from ..models import transformer as tfm
 from ..models import vit as vitm
 from ..models.init import ParamBuilder, split_tree
 from ..serving import (
-    Engine, EngineCfg, Scheduler, SchedulerCfg, ServingPipeline,
+    Engine, EngineCfg, KVCfg, Scheduler, SchedulerCfg, ServingPipeline,
     StreamRequest, StreamThrottled, WindowDone,
     precision_recall_f1, video_prediction,
 )
@@ -49,7 +49,8 @@ def default_vit(cfg) -> ViTCfg:
 
 
 def build_pipeline(arch: str, mode: str, codec: CodecCfg,
-                   ckpt: str | None = None, seed: int = 0) -> ServingPipeline:
+                   ckpt: str | None = None, seed: int = 0,
+                   stale_dtype: str = "bf16") -> ServingPipeline:
     cfg = get_config(arch)
     v = default_vit(cfg)
     params, _ = tfm.init_params(cfg, jax.random.PRNGKey(seed))
@@ -57,8 +58,10 @@ def build_pipeline(arch: str, mode: str, codec: CodecCfg,
     vparams, _ = split_tree(vitm.init_vit(pb, v, cfg.d_model))
     if ckpt:
         params, _ = checkpoint.load(ckpt, params)
-    return ServingPipeline(cfg, v, params, vparams,
-                           EngineCfg(mode=mode, codec=codec))
+    return ServingPipeline(
+        cfg, v, params, vparams,
+        EngineCfg(mode=mode, codec=codec,
+                  kv=KVCfg(stale_page_dtype=stale_dtype)))
 
 
 def build_engine(arch: str, mode: str, codec: CodecCfg,
@@ -88,13 +91,19 @@ def main() -> None:
     ap.add_argument("--ingest-workers", type=int, default=2,
                     help="host threads slicing codec windows while the "
                          "accelerator runs earlier groups")
+    ap.add_argument("--stale-dtype", default="bf16",
+                    choices=("bf16", "int8"),
+                    help="storage dtype for stale (non-refreshed) KV "
+                         "pages; int8 demotes them to the cold slab "
+                         "(docs/paged_kv.md §Quantized cold pages)")
     args = ap.parse_args()
 
     codec = CodecCfg(
         gop=args.gop, window_frames=args.window, stride_frames=args.stride,
         keep_ratio=args.keep_ratio,
     )
-    pipeline = build_pipeline(args.arch, args.mode, codec, args.ckpt)
+    pipeline = build_pipeline(args.arch, args.mode, codec, args.ckpt,
+                              stale_dtype=args.stale_dtype)
     videos = list(anomaly_dataset(args.videos, args.frames, args.hw, args.hw))
 
     sched = Scheduler(pipeline, SchedulerCfg(

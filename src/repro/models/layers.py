@@ -53,6 +53,61 @@ class KVCache(NamedTuple):
     v: jnp.ndarray
 
 
+class QuantKVCache(NamedTuple):
+    """Two-precision paged KV slab for one attention position.
+
+    Hot (live) pages stay in the storage float dtype; cold (demoted)
+    pages hold int8 values with one f32 scale per (page, kv head) —
+    symmetric quantization, ``value = int8 * scale``.  The page-id space
+    is unified: a page-table entry ``< n_hot`` rows into ``k``/``v``, an
+    entry ``>= n_hot`` rows into ``k8``/``v8`` at ``entry - n_hot`` —
+    the precision bit IS the page id (docs/paged_kv.md §Quantized cold
+    pages).
+
+      k, v:             (n_hot * page, n_kv, d_head) float slab
+      k8, v8:           (n_cold * page, n_kv, d_head) int8 slab
+      k_scale, v_scale: (n_cold, n_kv) f32 per-page-per-head scales
+    """
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    k8: jnp.ndarray
+    v8: jnp.ndarray
+    k_scale: jnp.ndarray
+    v_scale: jnp.ndarray
+
+
+INT8_QMAX = 127.0
+
+
+def page_quant_scale(vals: jnp.ndarray, axes: Tuple[int, ...]) -> jnp.ndarray:
+    """Symmetric int8 scale from the abs-max over ``axes``.
+
+    All-zero pages get scale 1.0 so quantize/dequantize round-trips them
+    to exact zeros (0 / 1 -> 0 -> 0 * 1); the guard is baked into the
+    STORED scale so the write and read paths always agree."""
+    amax = jnp.max(jnp.abs(vals.astype(F32)), axis=axes)
+    return jnp.where(amax > 0, amax / INT8_QMAX, 1.0)
+
+
+def quantize_kv(vals: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """vals (..., n_kv, d_head) float; scale (..., n_kv) f32 -> int8.
+
+    Values beyond the scale's range clip saturate at +-127 (refresh
+    writes into a cold page reuse the page's current scale)."""
+    q = jnp.round(vals.astype(F32) / scale[..., None])
+    return jnp.clip(q, -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+
+
+def dequantize_kv(vals: jnp.ndarray, scale: jnp.ndarray,
+                  dtype) -> jnp.ndarray:
+    """int8 (..., n_kv, d_head) * f32 scale (..., n_kv) -> storage dtype.
+
+    Rounds through the hot storage dtype so the kernel's in-register
+    dequant and the oracle's gathered logical view agree bitwise."""
+    return (vals.astype(F32) * scale[..., None]).astype(dtype)
+
+
 def init_attention(pb: ParamBuilder, cfg: ModelCfg):
     d, dh = cfg.d_model, cfg.d_head
     p = {
@@ -191,6 +246,9 @@ def attention_block(
     the page table (slot s -> pt[s // page_size] * page_size + s %
     page_size) and reads dispatch through ``ops.flash_refresh_paged``.
     ``cache_len`` is then mandatory and must equal n_pages * page_size.
+    A ``QuantKVCache`` slab adds int8 cold pages: writes are routed per
+    token by the page-table precision bit (entry >= n_hot) and the cold
+    slab + scales ride to the kernel as the ``cold`` operand group.
     """
     B, T, _ = x.shape
     q, k, v = _qkv(p, cfg, x, positions)
@@ -209,10 +267,39 @@ def attention_block(
             idx = scatter_idx
         else:
             idx = cache_offset + jnp.arange(T, dtype=jnp.int32)
-        phys = page_table[:, idx // page_size] * page_size + idx % page_size
-        ck = cache.k.at[phys].set(k.astype(cache.k.dtype))
-        cv = cache.v.at[phys].set(v.astype(cache.v.dtype))
-        new_cache = KVCache(ck, cv)
+        entries = page_table[:, idx // page_size]            # (B, T)
+        phys = entries * page_size + idx % page_size
+        if isinstance(cache, QuantKVCache):
+            # Two-precision slab: route each token's write by its page's
+            # precision.  Hot writes go through phys as usual — a cold
+            # entry's phys lands past the hot slab and mode="drop"
+            # discards it.  Cold writes quantize through the destination
+            # page's CURRENT scale (set by this window's reuse requant /
+            # demote pass) and are dropped for hot entries.
+            n_hot = cache.k.shape[0] // page_size
+            n_cold = cache.k8.shape[0] // page_size
+            is_cold = entries >= n_hot
+            ck = cache.k.at[phys].set(k.astype(cache.k.dtype), mode="drop")
+            cv = cache.v.at[phys].set(v.astype(cache.v.dtype), mode="drop")
+            cold_pg = jnp.clip(entries - n_hot, 0, n_cold - 1)
+            cold_rows = jnp.where(
+                is_cold, cold_pg * page_size + idx % page_size,
+                cache.k8.shape[0],
+            )
+            k8 = cache.k8.at[cold_rows].set(
+                quantize_kv(k, cache.k_scale[cold_pg]), mode="drop"
+            )
+            v8 = cache.v8.at[cold_rows].set(
+                quantize_kv(v, cache.v_scale[cold_pg]), mode="drop"
+            )
+            new_cache = QuantKVCache(ck, cv, k8, v8,
+                                     cache.k_scale, cache.v_scale)
+            cold = (k8, v8, cache.k_scale, cache.v_scale)
+        else:
+            ck = cache.k.at[phys].set(k.astype(cache.k.dtype))
+            cv = cache.v.at[phys].set(v.astype(cache.v.dtype))
+            new_cache = KVCache(ck, cv)
+            cold = None
         if scatter_idx is not None:
             kval = (kv_valid[:, :S] if kv_valid is not None
                     else jnp.ones((B, S), bool))
@@ -230,6 +317,7 @@ def attention_block(
         out = ops.flash_refresh_paged(
             q, ck, cv, positions, kval, page_table, page=page_size,
             causal=causal, window=window, block_map=bm, q_chunk=q_chunk,
+            cold=cold,
         )
     elif scatter_idx is not None:
         ck = cache.k.at[:, scatter_idx].set(k.astype(cache.k.dtype))

@@ -108,6 +108,10 @@ class WindowStats:
     # steady-state windows (no retrace) report 0; every row of one
     # batched call shares the same value.
     kernel_fallbacks: int = 0
+    # Steady-state KV bytes this stream occupies (paged slab share or
+    # dense per-stream allocation) — the memory axis of the capacity
+    # benches; int8 cold pages roughly halve it at fixed context.
+    kv_bytes_per_stream: int = 0
 
 
 # ======================================================================
@@ -472,6 +476,25 @@ class AttentionPrefill:
         self.pages_per_stream = self.cache_slots // self.KV_TILE
         self.pool: Optional[kv_pool.KVPool] = None
         self._pool_hint = ecfg.kv.pool_streams or 1
+        # -- quantized cold pages (docs/paged_kv.md §Quantized) --------
+        # stale_page_dtype="int8" demotes overlap pages the refresh
+        # selector has not rewritten for ``demote_after`` windows into
+        # an int8 cold slab; the kernels dequantize in-register.  The
+        # demotable set is layout-static (pages fully inside the
+        # overlap — see kv_pool.demotable_pages), so cold capacity is
+        # reserved per stream at admission.
+        assert ecfg.kv.stale_page_dtype in ("bf16", "int8"), \
+            ecfg.kv.stale_page_dtype
+        self.quant = bool(self.paged and ecfg.kv.stale_page_dtype == "int8")
+        self.cold_per_stream = (
+            len(kv_pool.demotable_pages(layout, self.KV_TILE))
+            if self.quant else 0
+        )
+        self.demote_after = max(1, ecfg.kv.demote_after)
+        self._jit_demote = jax.jit(
+            kv_pool.demote_pool_caches, static_argnums=3,
+            donate_argnums=_donate(0),
+        )
         # fresh windows in paged mode go through scatter-mode run_stack
         # (tfm.prefill assumes batched dense caches); their q positions
         # are the full [0, total_len) range, so the visit list is a
@@ -526,17 +549,34 @@ class AttentionPrefill:
         else:
             self._pool_hint = max(self._pool_hint, n_streams)
             want = self._pool_hint
-        need = want * self.pages_per_stream
+        if self.quant:
+            # Steady-state streams hold P-D hot pages (tail) + D cold
+            # pages (demoted overlap); admission is all-hot, so one
+            # extra stream's worth of demotable pages stays hot until
+            # its first demote window: hot = N*(P-D) + D, cold = N*D.
+            # Streams therefore admit staggered (the scheduler's
+            # throttling path) — that is the memory saving.
+            D = self.cold_per_stream
+            need = want * (self.pages_per_stream - D) + D
+            need_cold = want * D
+        else:
+            need, need_cold = want * self.pages_per_stream, 0
         if self.pool is None:
-            self.pool = kv_pool.KVPool(self.cfg, need, page=self.KV_TILE)
-        elif self.pool.n_pages < need:
+            self.pool = kv_pool.KVPool(self.cfg, need, page=self.KV_TILE,
+                                       cold_pages=need_cold)
+        elif self.pool.n_pages < need or self.pool.n_cold < need_cold:
             assert self.pool.used_pages == 0, \
                 "cannot grow a pool with pages in use; pin pool_streams"
-            self.pool = kv_pool.KVPool(self.cfg, need, page=self.KV_TILE)
+            self.pool = kv_pool.KVPool(self.cfg, need, page=self.KV_TILE,
+                                       cold_pages=need_cold)
 
     def can_admit(self, n_streams: int) -> bool:
         if not self.paged or self.pool is None:
             return True
+        if self.quant:
+            return self.pool.can_admit_streams(
+                n_streams, self.pages_per_stream, self.cold_per_stream
+            )
         return self.pool.can_admit(n_streams * self.pages_per_stream)
 
     def release(self, state: Optional[Dict[str, Any]]) -> None:
@@ -545,11 +585,30 @@ class AttentionPrefill:
             return
         pages = state.pop("pages", None)
         if pages is not None and self.pool is not None:
+            if self.quant and not (
+                np.asarray(pages) >= self.pool.n_pages
+            ).any():
+                # evicted before its first demote window: release the
+                # admission-time cold reservation too
+                self.pool.unreserve_cold(self.cold_per_stream)
             self.pool.evict(pages)
+
+    def kv_bytes_per_stream(self) -> int:
+        """Steady-state KV bytes one admitted stream occupies.
+
+        Paged: slab bytes of its resident pages (hot tail + demoted
+        int8 overlap, scales included, in quant mode).  Dense concat:
+        the full per-stream bf16 cache allocation."""
+        if self.paged and self.pool is not None:
+            D = self.cold_per_stream
+            return self.pool.bytes_per_stream(self.pages_per_stream - D, D)
+        cfg = self.cfg
+        return (cfg.repeats * cfg.period * 2 * self.cache_slots
+                * cfg.n_kv * cfg.d_head * 2)      # k+v, bf16
 
     def _result(self, logits, vis, vval, caches, kv_valid, valid,
                 n_refreshed, flops, t_select, pages=None,
-                page_table=None) -> PrefillResult:
+                page_table=None, age=None) -> PrefillResult:
         lay = self.layout
         if pages is not None:
             # paged: KV lives in the shared slab; the per-stream state
@@ -557,6 +616,10 @@ class AttentionPrefill:
             # whole t_overhead of a fused window).
             state = {"vis": vis, "vval": vval, "kv_valid": kv_valid,
                      "pages": pages}
+            if age is not None:
+                # windows each stream's overlap pages have survived
+                # untouched — the demote clock (quant mode only)
+                state["age"] = age
         else:
             state = {"vis": vis, "vval": vval, "caches": caches,
                      "kv_valid": kv_valid}
@@ -583,7 +646,8 @@ class AttentionPrefill:
         if self.paged:
             self.ensure_pool(S)
             pool = self.pool
-            pages = pool.admit_streams(S, self.pages_per_stream)
+            pages = pool.admit_streams(S, self.pages_per_stream,
+                                       self.cold_per_stream)
             pt = jnp.asarray(pages, jnp.int32)
             logits, slab = self._jit_paged_fresh(
                 self.params, pool.slab, pt, embeds, valid
@@ -593,9 +657,10 @@ class AttentionPrefill:
             flops = flopcount.prefill_flops(
                 self.cfg, lay.total_len, lay.total_len
             )
+            age = np.zeros((S,), np.int32) if self.quant else None
             return self._result(logits, vis, vval, slab, kv_valid, valid,
                                 lay.total_len, flops, 0.0,
-                                pages=pages, page_table=pt)
+                                pages=pages, page_table=pt, age=age)
         caches = tfm.init_caches(self.cfg, S, alloc)
         logits, caches, _ = self._jit_prefill(
             self.params, jnp.zeros((S, lay.total_len), jnp.int32),
@@ -621,11 +686,18 @@ class AttentionPrefill:
         valid = jnp.concatenate(
             [vval, jnp.ones((S, lay.query_len), bool)], 1
         )
-        pages = pt = None
+        pages = pt = age = None
         if self.paged:
             pages = state["pages"]
             pt = jnp.asarray(pages, jnp.int32)
             caches = self._jit_paged_reuse(self.pool.slab, pt)
+            if self.quant:
+                # reuse first (it rewrote the overlap at full precision),
+                # THEN demote newly-eligible streams' overlap pages —
+                # the selective refresh below reads/writes through the
+                # updated mixed-precision page table.
+                age = state["age"] + 1
+                caches, pages, pt = self._demote(caches, pages, age)
             self.pool.slab = caches
         else:
             caches = self._jit_reuse(state["caches"])
@@ -652,7 +724,31 @@ class AttentionPrefill:
         flops = flopcount.prefill_flops(self.cfg, len(ridx), lay.total_len)
         return self._result(logits, vis, vval, caches, kv_valid, valid,
                             len(ridx), flops, t_select,
-                            pages=pages, page_table=pt)
+                            pages=pages, page_table=pt, age=age)
+
+    def _demote(self, caches, pages: np.ndarray, age: np.ndarray):
+        """Codec-guided demotion: quantize eligible streams' overlap
+        pages into the int8 cold slab (kv_pool.demote_pool_caches, jit
+        with a donated slab) and swap the cold ids into their page
+        tables.  A stream is eligible once its overlap pages survived
+        ``demote_after`` reuse windows and it has not demoted yet; the
+        demotable set is the layout-static prefix pages [0, D)."""
+        D = self.cold_per_stream
+        if D == 0:
+            return caches, pages, jnp.asarray(pages, jnp.int32)
+        pool = self.pool
+        demoted = (pages[:, :D] >= pool.n_pages).any(axis=1)
+        rows = np.nonzero((age >= self.demote_after) & ~demoted)[0]
+        if rows.size:
+            src = pages[rows][:, :D]
+            dst = pool.demote(src).reshape(src.shape)
+            caches = self._jit_demote(
+                caches, jnp.asarray(src, jnp.int32),
+                jnp.asarray(dst, jnp.int32), self.KV_TILE,
+            )
+            pages = pages.copy()
+            pages[rows[:, None], np.arange(D)[None, :]] = dst
+        return caches, pages, jnp.asarray(pages, jnp.int32)
 
     def absorb_decode(self, state, caches) -> None:
         """Decode extends the stream caches in place; the decode slots
@@ -702,11 +798,22 @@ class AttentionPrefill:
             from ..kernels.ref import apply_rope_ref
             pos = jnp.arange(lay.overlap_tokens)[None]
             k_new = apply_rope_ref(kq, pos, self.cfg.rope_theta)
-            blk0 = reused_caches.blocks[0].k[0]
+            b0 = reused_caches.blocks[0]
+            blk0 = b0.k[0]
             if page_table is not None:
                 # paged slab: gather this stream's logical view first
-                from ..kernels.ref import paged_gather_ref
-                blk0 = paged_gather_ref(blk0, page_table, self.KV_TILE)
+                # (precision-routed — demoted pages dequantize through
+                # the storage dtype, exactly what the kernel reads)
+                from ..kernels.ref import (
+                    paged_gather_quant_ref, paged_gather_ref,
+                )
+                if isinstance(b0, layers.QuantKVCache):
+                    blk0 = paged_gather_quant_ref(
+                        blk0, b0.k8[0], b0.k_scale[0],
+                        page_table, self.KV_TILE,
+                    )
+                else:
+                    blk0 = paged_gather_ref(blk0, page_table, self.KV_TILE)
             k_reused = blk0[:, : lay.overlap_tokens]
             dev = jnp.linalg.norm(
                 (k_new - k_reused.astype(k_new.dtype)).astype(F32),
@@ -968,6 +1075,12 @@ class ServingPipeline:
         if self.paged:
             self.backend.release(state)
 
+    def kv_bytes_per_stream(self) -> int:
+        """Steady-state KV bytes one admitted stream occupies (0 for
+        backends without a KV-byte notion, e.g. recurrent families)."""
+        fn = getattr(self.backend, "kv_bytes_per_stream", None)
+        return fn() if fn is not None else 0
+
     # ------------------------------------------------------------------
     def _query_embeds(self, S: int) -> jnp.ndarray:
         ids = jnp.asarray(QUERY_IDS, jnp.int32)[None]
@@ -1075,6 +1188,7 @@ class ServingPipeline:
         t_decode = dec.t_decode + (time.perf_counter() - t0)
         n_fallback = enc.fallbacks + pf.fallbacks + dec.fallbacks
         patches, slots = enc.patches, enc.slots
+        kv_bytes = self.kv_bytes_per_stream()
         return [
             WindowStats(
                 answer=int(answers[i]),
@@ -1091,6 +1205,7 @@ class ServingPipeline:
                 t_prefill=pf.t_prefill / S,
                 t_decode=t_decode / S, t_overhead=pr.t_select / S,
                 kernel_fallbacks=n_fallback,
+                kv_bytes_per_stream=kv_bytes,
             )
             for i in range(S)
         ]

@@ -59,6 +59,15 @@ class KVCfg:
     # streams); None sizes it from the scheduler's max_concurrent.
     paged_kv: bool = True
     pool_streams: Optional[int] = None
+    # storage dtype for stale (overlap-carried, non-refreshed) pages:
+    # "bf16" keeps the single-precision slab (the bitwise PR 7 control);
+    # "int8" demotes pages the refresh selector has not rewritten for
+    # ``demote_after`` windows into an int8 cold slab with per-page-
+    # per-head scales (docs/paged_kv.md §Quantized cold pages), roughly
+    # doubling pages-per-byte at fixed slab bytes.
+    stale_page_dtype: str = "bf16"
+    # windows a page must survive untouched before demotion (>= 1)
+    demote_after: int = 1
 
 
 @dataclasses.dataclass(frozen=True)

@@ -90,6 +90,10 @@ def _concat_states(states: List[Dict[str, Any]],
             )
         elif key == "pages":
             out[key] = np.concatenate(vals, axis=0)
+        elif isinstance(vals[0], np.ndarray):
+            # host-side per-stream metadata (e.g. the quant demote
+            # clock "age") stays numpy — no device staging
+            out[key] = np.concatenate(vals, axis=0)
         elif isinstance(vals[0], (int, float)):
             if not all(v == vals[0] for v in vals):
                 raise SchedulerError(
@@ -757,6 +761,7 @@ class Scheduler:
         pr = g.pf.pr
         S = len(g.progs)
         t_decode = g.dec.t_decode + t_sync   # sync is the decode tail
+        kv_bytes = self.pipeline.kv_bytes_per_stream()
         for i, (prog, row) in enumerate(zip(g.progs, g.rows)):
             sess = prog.sess
             st = WindowStats(
@@ -777,6 +782,7 @@ class Scheduler:
                 t_overhead=pr.t_select / S + g.t_stage * g.shares[i],
                 kernel_fallbacks=(row.fallbacks + g.pf.fallbacks
                                   + g.dec.fallbacks),
+                kv_bytes_per_stream=kv_bytes,
             )
             res = WindowResult(sess.request.stream_id, sess.sid,
                                row.window, st)
@@ -802,6 +808,17 @@ class Scheduler:
     # ==================================================================
     # fleet metrics
     # ==================================================================
+    def kv_memory(self) -> Dict[str, int]:
+        """Fleet KV memory: total slab bytes (paged pools; 0 for dense
+        and recurrent backends) + steady-state bytes per admitted
+        stream.  The denominator of the capacity benches — int8 cold
+        pages roughly halve bytes_per_stream at fixed context."""
+        pool = getattr(self.pipeline.backend, "pool", None)
+        return {
+            "slab_bytes": int(pool.slab_bytes) if pool is not None else 0,
+            "bytes_per_stream": int(self.pipeline.kv_bytes_per_stream()),
+        }
+
     @property
     def vit_pack_utilization(self) -> float:
         """Kept-patch fraction of the ViT lanes computed so far — the

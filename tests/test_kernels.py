@@ -711,3 +711,145 @@ def test_flash_prefill_paged_guard_and_fallback():
         np.asarray(ref.flash_prefill_paged_ref(q192, slab_k, slab_v, pt)),
         atol=1e-6,
     )
+
+
+# ----------------------------------------------------------------------
+# two-precision paged attention: int8 cold pages + fused dequant
+# ----------------------------------------------------------------------
+from repro.models.layers import (  # noqa: E402
+    dequantize_kv, page_quant_scale, quantize_kv,
+)
+
+
+def _quant_paged_case(n_streams, pages_per, cold_per, hkv=2, d=32, *,
+                      page=128, seed=31):
+    """Mixed-precision slab: each stream's first ``cold_per`` pages are
+    int8 cold pages (unified id space: entry >= n_hot addresses the cold
+    slab at entry - n_hot), the tail stays hot bf16.  One page in each
+    slab stays unmapped so stale rows exist in both precisions."""
+    n_hot = n_streams * (pages_per - cold_per) + 1
+    n_cold = n_streams * cold_per + 1
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    hot_k = jax.random.normal(ks[0], (n_hot * page, hkv, d), jnp.bfloat16)
+    hot_v = jax.random.normal(ks[1], (n_hot * page, hkv, d), jnp.bfloat16)
+    ck = jax.random.normal(ks[2], (n_cold, page, hkv, d))
+    cv = jax.random.normal(ks[3], (n_cold, page, hkv, d))
+    k_scale = page_quant_scale(ck, (1, 3))
+    v_scale = page_quant_scale(cv, (1, 3))
+    k8 = quantize_kv(ck, k_scale[:, None]).reshape(n_cold * page, hkv, d)
+    v8 = quantize_kv(cv, v_scale[:, None]).reshape(n_cold * page, hkv, d)
+    rng = np.random.default_rng(seed)
+    hot_ids = rng.permutation(n_hot - 1)
+    cold_ids = rng.permutation(n_cold - 1) + n_hot
+    pt = np.zeros((n_streams, pages_per), np.int32)
+    nh = pages_per - cold_per
+    for b in range(n_streams):
+        pt[b, :cold_per] = cold_ids[b * cold_per:(b + 1) * cold_per]
+        pt[b, cold_per:] = hot_ids[b * nh:(b + 1) * nh]
+    kvv = jax.random.uniform(ks[4], (n_streams, pages_per * page)) > 0.3
+    return (hot_k, hot_v, (k8, v8, k_scale, v_scale), jnp.asarray(pt),
+            kvv)
+
+
+def test_paged_gather_quant_matches_manual_indexing():
+    """Hot slots are slab rows verbatim; cold slots are the int8 row
+    dequantized through the storage dtype — value-identical to what the
+    fused kernel feeds QK^T."""
+    page = 128
+    hot_k, _, (k8, _, k_scale, _), pt, _ = _quant_paged_case(2, 3, 2)
+    n_hot = hot_k.shape[0] // page
+    g = np.asarray(ref.paged_gather_quant_ref(hot_k, k8, k_scale, pt, page))
+    hot = np.asarray(hot_k)
+    for b in range(2):
+        for s in (0, 127, 128, 255, 256, 340, 383):
+            entry = int(pt[b, s // page])
+            if entry < n_hot:
+                want = hot[entry * page + s % page]
+            else:
+                cpg = entry - n_hot
+                row = k8[cpg * page + s % page]
+                want = np.asarray(dequantize_kv(
+                    row, k_scale[cpg], hot_k.dtype))
+            np.testing.assert_array_equal(g[b, s], want)
+
+
+@pytest.mark.parametrize("pattern", sorted(SCATTER_PATTERNS))
+def test_flash_refresh_paged_quant_matches_ref(pattern):
+    """Fused-dequant kernel (interpret) vs gather-and-dequant oracle on
+    a mixed hot/cold page table — kernel path taken, not a fallback."""
+    q_pos = SCATTER_PATTERNS[pattern]
+    hot_k, hot_v, cold, pt, kvv = _quant_paged_case(2, 2, 1)
+    q = jax.random.normal(
+        jax.random.PRNGKey(37), (2, len(q_pos), 4, 32), jnp.bfloat16)
+    qp = jnp.broadcast_to(jnp.asarray(q_pos)[None], (2, len(q_pos)))
+    bm = build_block_map(q_pos, 256, tq=128, tk=128, causal=True)
+    before = _guard_counts("flash_refresh_paged").get("kernel", 0)
+    with ops.kernel_mode("interpret"):
+        o_k = ops.flash_refresh_paged(
+            q, hot_k, hot_v, qp, kvv, pt, block_map=bm, causal=True,
+            cold=cold)
+    assert _guard_counts("flash_refresh_paged").get("kernel", 0) == before + 1
+    o_r = ref.flash_refresh_paged_ref(
+        q, hot_k, hot_v, qp, kvv, pt, causal=True, cold=cold)
+    np.testing.assert_allclose(
+        np.asarray(o_k, np.float32), np.asarray(o_r, np.float32),
+        atol=3e-2)
+
+
+def test_flash_refresh_paged_quant_oracle_bitwise_vs_dequantized_dense():
+    """The quant oracle == the dense refresh on the manually dequantized
+    logical view, bitwise: dequant rounds through the storage dtype, so
+    precision routing adds no reduction-order freedom."""
+    q_pos = SCATTER_PATTERNS["anchors_tail"]
+    hot_k, hot_v, cold, pt, kvv = _quant_paged_case(2, 2, 1, seed=41)
+    k8, v8, k_scale, v_scale = cold
+    q = jax.random.normal(jax.random.PRNGKey(43), (2, len(q_pos), 4, 32))
+    qp = jnp.broadcast_to(jnp.asarray(q_pos)[None], (2, len(q_pos)))
+    o_paged = ops.flash_refresh_paged(
+        q, hot_k, hot_v, qp, kvv, pt, causal=True, cold=cold)
+    kg = ref.paged_gather_quant_ref(hot_k, k8, k_scale, pt, 128)
+    vg = ref.paged_gather_quant_ref(hot_v, v8, v_scale, pt, 128)
+    o_dense = ops.flash_refresh(q, kg, vg, qp, kvv, causal=True)
+    np.testing.assert_array_equal(np.asarray(o_paged), np.asarray(o_dense))
+
+
+def test_flash_refresh_paged_quant_scale_f32_guard():
+    """f16 scales are refused by exactly the scale-f32 eligibility rule
+    (counted, oracle output) — never silently mis-dequantized."""
+    q_pos = SCATTER_PATTERNS["anchors_only"]
+    hot_k, hot_v, (k8, v8, k_scale, v_scale), pt, kvv = _quant_paged_case(
+        1, 2, 1, seed=47)
+    cold16 = (k8, v8, k_scale.astype(jnp.float16),
+              v_scale.astype(jnp.float16))
+    q = jax.random.normal(jax.random.PRNGKey(53), (1, len(q_pos), 4, 32))
+    qp = jnp.asarray(q_pos)[None]
+    bm = build_block_map(q_pos, 256, tq=128, tk=128, causal=True)
+    before = _guard_counts("flash_refresh_paged").get("guard:scale-f32", 0)
+    with ops.kernel_mode("interpret"):
+        out = ops.flash_refresh_paged(
+            q, hot_k, hot_v, qp, kvv, pt, block_map=bm, causal=True,
+            cold=cold16)
+    counts = _guard_counts("flash_refresh_paged")
+    assert counts.get("guard:scale-f32", 0) == before + 1
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(ref.flash_refresh_paged_ref(
+            q, hot_k, hot_v, qp, kvv, pt, causal=True, cold=cold16)),
+        atol=1e-6)
+
+
+@pytest.mark.parametrize("window", [None, 64])
+def test_flash_prefill_paged_quant_matches_ref(window):
+    hot_k, hot_v, cold, pt, _ = _quant_paged_case(2, 2, 1, seed=59)
+    q = jax.random.normal(
+        jax.random.PRNGKey(61), (2, 256, 4, 32), jnp.bfloat16)
+    before = _guard_counts("flash_prefill_paged").get("kernel", 0)
+    with ops.kernel_mode("interpret"):
+        o_k = ops.flash_prefill_paged(
+            q, hot_k, hot_v, pt, window=window, cold=cold)
+    assert _guard_counts("flash_prefill_paged").get("kernel", 0) == before + 1
+    o_r = ref.flash_prefill_paged_ref(
+        q, hot_k, hot_v, pt, window=window, cold=cold)
+    np.testing.assert_allclose(
+        np.asarray(o_k, np.float32), np.asarray(o_r, np.float32),
+        atol=3e-2)

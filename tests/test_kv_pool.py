@@ -277,3 +277,126 @@ def test_paged_session_state_holds_no_kv(stack):
     (sess,) = sched._active.values()
     assert "caches" not in sess.state and "pages" in sess.state
     assert isinstance(sess.state["pages"], np.ndarray)
+
+
+# ----------------------------------------------------------------------
+# two-precision pool: demotion churn + int8 cold-page serving parity
+# ----------------------------------------------------------------------
+# Long-overlap codec for the quant e2e legs: window 16 / stride 4 at
+# keep_ratio=1.0 leaves one full demotable overlap page per stream
+# (P=3, D=1), and a 24-frame video spans 3 windows — window 0 prefill,
+# window 1 demotes, window 2 reads through the int8 cold page.
+QCODEC = CodecCfg(gop=4, block=16, search_radius=4, window_frames=16,
+                  stride_frames=4, keep_ratio=1.0)
+
+
+def _quant_pipeline(params, vparams, mode, *, stale_dtype, cfg=LM):
+    return ServingPipeline(
+        cfg, VIT, params, vparams,
+        EngineCfg(mode=mode, codec=QCODEC,
+                  kv=KVCfg(paged_kv=True, stale_page_dtype=stale_dtype)))
+
+
+@pytest.fixture(scope="module")
+def long_streams():
+    return [
+        generate_video(VideoSpec(n_frames=24, height=112, width=112,
+                                 anomaly=bool(i), seed=11 + i))[0]
+        for i in range(2)
+    ]
+
+
+def test_random_churn_with_demotion_preserves_accounting():
+    """Poisson churn over a two-precision pool: admits (with cold
+    reservation), demotes, and evicts — of both demoted and never-
+    demoted streams — must never alias a page id across streams or
+    precisions, never lose one, and keep the cold reservation exactly
+    covering the live streams that have not demoted yet."""
+    P, D = 4, 2
+    rng = np.random.default_rng(1)
+    pool = kv_pool.KVPool(LM, 16, cold_pages=8)
+    live = []                       # [page ids (P,), demoted?]
+    for _ in range(300):
+        r = rng.random()
+        undemoted = [s for s in live if not s[1]]
+        if undemoted and r < 0.3:
+            s = undemoted[int(rng.integers(len(undemoted)))]
+            s[0][:D] = pool.demote(s[0][:D])     # unified ids >= n_pages
+            s[1] = True
+        elif live and (r < 0.6 or not pool.can_admit_streams(1, P, D)):
+            pt, demoted = live.pop(int(rng.integers(len(live))))
+            if not demoted:
+                pool.unreserve_cold(D)           # reservation dies with it
+            pool.evict(pt)
+        elif pool.can_admit_streams(1, P, D):
+            live.append([pool.admit_streams(1, P, D)[0], False])
+        held = [int(p) for s in live for p in s[0]]
+        assert len(held) == len(set(held))       # no aliasing, either slab
+        assert pool.used_pages == len(held)
+        hot_held = sum(p < pool.n_pages for p in held)
+        assert pool.free_pages == pool.n_pages - hot_held
+        assert pool.free_cold_pages == pool.n_cold - (len(held) - hot_held)
+        assert pool._reserved_cold == D * len([s for s in live if not s[1]])
+        assert pool._reserved_cold <= pool.free_cold_pages
+    for pt, demoted in live:
+        if not demoted:
+            pool.unreserve_cold(D)
+        pool.evict(pt)
+    assert pool.free_pages == pool.n_pages
+    assert pool.free_cold_pages == pool.n_cold
+    assert pool._reserved_cold == 0
+
+
+@pytest.mark.parametrize("mode", ["codecflow", "cacheblend"])
+def test_int8_cold_pages_preserve_answers(stack, long_streams, mode):
+    """Quantized vs all-bf16 serving through the Scheduler: window 0
+    (before any demotion) is bitwise identical, later windows stay
+    within the int8 round-trip budget and never flip a yes/no answer,
+    and both slabs (hot + cold + reservation) drain on close."""
+    params, vparams, _ = stack
+    pq = _quant_pipeline(params, vparams, mode, stale_dtype="int8")
+    assert pq.backend.quant and pq.backend.cold_per_stream >= 1
+    quant = _serve(pq, long_streams, max_concurrent=2)
+    pool = pq.backend.pool
+    assert pool.free_pages == pool.n_pages
+    assert pool.free_cold_pages == pool.n_cold
+    assert pool._reserved_cold == 0
+    bf16 = _serve(
+        _quant_pipeline(params, vparams, mode, stale_dtype="bf16"),
+        long_streams, max_concurrent=2)
+    for sid in quant:
+        assert quant[sid][0] == bf16[sid][0]     # pre-demotion: bitwise
+        for lq, lb in zip(quant[sid], bf16[sid]):
+            assert (lq[0] > lq[1]) == (lb[0] > lb[1]), (sid, lq, lb)
+            assert max(abs(a - b) for a, b in zip(lq, lb)) < 0.5
+
+
+@pytest.mark.parametrize("geom", ["gqa-1kv", "sliding-window"])
+def test_int8_cold_pages_geometries(geom):
+    """Quant parity must also hold where kernel masks and gather shapes
+    change: single-KV-head GQA and sliding-window attention."""
+    cfg = (
+        dataclasses.replace(LM, name="tiny-gqa1", n_kv=1)
+        if geom == "gqa-1kv"
+        else dataclasses.replace(LM, name="tiny-sw", sliding_window=64)
+    )
+    params, _ = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    vparams, _ = split_tree(
+        vitm.init_vit(ParamBuilder(jax.random.PRNGKey(1)), VIT, cfg.d_model))
+    streams = [
+        generate_video(VideoSpec(n_frames=20, height=112, width=112,
+                                 anomaly=bool(i), seed=17 + i))[0]
+        for i in range(2)
+    ]
+    pq = _quant_pipeline(params, vparams, "codecflow",
+                         stale_dtype="int8", cfg=cfg)
+    assert pq.backend.quant and pq.backend.cold_per_stream >= 1
+    quant = _serve(pq, streams, max_concurrent=2)
+    bf16 = _serve(
+        _quant_pipeline(params, vparams, "codecflow",
+                        stale_dtype="bf16", cfg=cfg),
+        streams, max_concurrent=2)
+    for sid in quant:
+        for lq, lb in zip(quant[sid], bf16[sid]):
+            assert (lq[0] > lq[1]) == (lb[0] > lb[1]), (sid, lq, lb)
+            assert max(abs(a - b) for a, b in zip(lq, lb)) < 0.5

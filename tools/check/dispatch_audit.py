@@ -243,6 +243,91 @@ def _paged_refresh_rows() -> List[AuditRow]:
     return rows
 
 
+def _quant_paged_rows() -> List[AuditRow]:
+    """Two-precision slab geometries (docs/paged_kv.md §Quantized cold
+    pages): the fused in-kernel dequant path must stay kernel-eligible
+    for every serving quant geometry — the mixed hot/cold page tables a
+    freshly-demoted fleet produces and the all-cold steady state (the
+    cold=None degenerate IS the single-precision contract, audited by
+    ``_paged_refresh_rows``).  Non-f32 scales and non-int8 cold slabs
+    must be refused by exactly the documented guard, never silently
+    mis-dequantized."""
+    rows = []
+    H, Hkv, D = ATTN["H"], ATTN["Hkv"], ATTN["D"]
+    lay, sw = LAYOUTS[0]
+    need = lay.total_len + MAX_NEW_TOKENS
+    slots = -(-need // KV_TILE) * KV_TILE
+    pps = slots // PAGE
+    phys = max(PAGED_FLEETS) * pps * PAGE
+    bm = refresh_block_map(lay, window=sw, kv_len=slots)
+    # demotable pages/stream: the overlap prefix demoted in steady state
+    d_cold = lay.overlap_tokens // PAGE
+    cases = (
+        # (tag, B, cold pages in slab, cold dtype, scale dtype, expect)
+        ("mixed-pt", 1, max(PAGED_FLEETS) * d_cold, "int8", F32, "kernel"),
+        ("mixed-pt", 4, max(PAGED_FLEETS) * d_cold, "int8", F32, "kernel"),
+        ("all-cold-pt", 1, max(PAGED_FLEETS) * pps, "int8", F32, "kernel"),
+        ("f16-scales", 1, max(PAGED_FLEETS) * d_cold, "int8", "float16",
+         "oracle:scale-f32"),
+        ("bf16-cold-slab", 1, max(PAGED_FLEETS) * d_cold, BF16, F32,
+         "oracle:cold-dtype"),
+    )
+    for tag, B, n_cold, cdt, sdt, expect in cases:
+        q = _sds((B, bm.n_q, H, D), BF16)
+        k = _sds((phys, Hkv, D), BF16)
+        q_pos = _sds((B, bm.n_q), "int32")
+        kvv = _sds((B, slots), "bool")
+        pt = _sds((B, pps), "int32")
+        k8 = _sds((n_cold * PAGE, Hkv, D), cdt)
+        sc = _sds((n_cold, Hkv), sdt)
+        facts = contracts.flash_refresh_paged_facts(
+            q, k, k, q_pos, kvv, pt, page=PAGE, causal=True,
+            window=sw, block_map=bm, positions_match=lambda: True,
+            cold=(k8, k8, sc, sc),
+        )
+        fn = functools.partial(
+            ops.flash_refresh_paged, page=PAGE, causal=True,
+            window=sw, block_map=bm,
+        )
+        rows.append(
+            _run_one(
+                "flash_refresh_paged",
+                f"quant {tag} B={B} cold={n_cold}p "
+                f"{cdt}/scales-{sdt}",
+                expect,
+                facts,
+                lambda q, k, v, p, m, t, k8, v8, ks, vs, _fn=fn: _fn(
+                    q, k, v, p, m, t, cold=(k8, v8, ks, vs)),
+                (q, k, k, q_pos, kvv, pt, k8, k8, sc, sc),
+                (B, bm.n_q, H, D),
+            )
+        )
+    # fused dequant on the paged fresh-prefill surface (bench/tools)
+    q = _sds((1, 256, H, D), BF16)
+    k = _sds((16 * PAGE, Hkv, D), BF16)
+    pt = _sds((1, 2), "int32")
+    k8 = _sds((4 * PAGE, Hkv, D), "int8")
+    sc = _sds((4, Hkv), F32)
+    facts = contracts.flash_prefill_paged_facts(
+        q, k, k, pt, page=PAGE, causal=True, window=None, q_offset=0,
+        cold=(k8, k8, sc, sc),
+    )
+    fn = functools.partial(ops.flash_prefill_paged, page=PAGE, causal=True)
+    rows.append(
+        _run_one(
+            "flash_prefill_paged",
+            "quant B=1 Sq=256 cold=4p int8/scales-float32",
+            "kernel",
+            facts,
+            lambda q, k, v, t, k8, v8, ks, vs, _fn=fn: _fn(
+                q, k, v, t, cold=(k8, v8, ks, vs)),
+            (q, k, k, pt, k8, k8, sc, sc),
+            (1, 256, H, D),
+        )
+    )
+    return rows
+
+
 def _paged_prefill_rows() -> List[AuditRow]:
     """Paged fresh-prefill geometries: tile-aligned logical windows over
     slabs of varying occupancy hit the kernel; ragged query lengths are
@@ -435,8 +520,9 @@ def _slab_rows() -> List[AuditRow]:
 def run_audit() -> Tuple[List[AuditRow], List[str]]:
     """Returns (all rows, failure strings)."""
     rows = (
-        _refresh_rows() + _paged_refresh_rows() + _packed_rows()
-        + _prefill_rows() + _paged_prefill_rows() + _slab_rows()
+        _refresh_rows() + _paged_refresh_rows() + _quant_paged_rows()
+        + _packed_rows() + _prefill_rows() + _paged_prefill_rows()
+        + _slab_rows()
     )
     failures = [
         f"{r.op} [{r.geometry}]: {r.failure}" for r in rows if r.failure
