@@ -17,8 +17,9 @@ from repro.configs.base import CodecCfg, ModelCfg, ViTCfg
 from repro.data.pipeline import anomaly_dataset
 from repro.data.video import motion_level_spec, generate_video
 from repro.serving import (
-    Engine, EngineCfg, KVCfg, Scheduler, SchedulerCfg, ServingPipeline,
-    StreamRequest, precision_recall_f1, video_prediction,
+    Engine, EngineCfg, EventProtocolValidator, KVCfg, Scheduler,
+    SchedulerCfg, ServingPipeline, StreamRequest, precision_recall_f1,
+    video_prediction,
 )
 from repro.training.anomaly_task import train_tiny_vlm
 
@@ -102,7 +103,14 @@ def run_mode(mode: str, codec: CodecCfg = CODEC, videos=None,
     t0 = time.perf_counter()
     sids = [sched.submit(StreamRequest(i, np.asarray(frames), tag=label))
             for i, (frames, label) in enumerate(videos)]
-    per_session = sched.run()
+    # drain through the runtime protocol validator: every bench run
+    # (including the bench_streams async-vs-lockstep A/B) also asserts
+    # the per-stream event protocol, for free
+    validator = EventProtocolValidator()
+    for _ in validator.wrap(sched.events()):
+        pass
+    validator.assert_complete()
+    per_session = {sid: sched.session(sid).results for sid in sids}
     wall = time.perf_counter() - t0
     preds, truths = [], []
     agg = dict(flops_vit=0.0, flops_prefill=0.0, flops_decode=0.0,

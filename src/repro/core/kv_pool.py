@@ -71,6 +71,19 @@ class KVPool:
     leaves) is functionally updated by the jitted serving calls and
     stored back by the caller (``AttentionPrefill``).
 
+    **Thread affinity (scheduler-thread-only).**  The free lists,
+    ``_in_use``, the cold reservation counter, and ``slab`` rebinding
+    are deliberately unlocked: every mutator is only ever called from
+    the scheduler thread (the async engine's ingest workers touch codec
+    buffers, never the pool — ``Scheduler._ingest_one`` calls
+    ``frontend.window_host`` and nothing else).  The slab is also
+    *donated* to the jitted serving calls, so a second thread mutating
+    it would race the donation/rebind sequence no lock here could fix.
+    Both contracts are enforced statically: the ``shared-state`` pass
+    in ``tools/check`` denies these methods to thread-reachable code,
+    and the ``donation-linearity`` pass checks the rebind
+    (docs/static_analysis.md §Concurrency passes).
+
     With ``cold_pages > 0`` the slab is two-precision
     (:class:`QuantKVCache` blocks): ``n_pages`` hot float pages plus
     ``cold_pages`` int8 cold pages with per-page-per-head f32 scales.

@@ -9,8 +9,8 @@ from .config import KVCfg, PruneCfg, RefreshCfg, SchedulerCfg
 from .engine import Engine
 from .scheduler import Scheduler
 from .events import (
-    SchedulerError, SchedulerEvent, StreamAdmitted, StreamDone,
-    StreamThrottled, WindowDone,
+    EventProtocolError, EventProtocolValidator, SchedulerError,
+    SchedulerEvent, StreamAdmitted, StreamDone, StreamThrottled, WindowDone,
 )
 from .metrics import precision_recall_f1, video_prediction, agreement
 from . import flops
@@ -25,7 +25,8 @@ __all__ = [
     "WindowResult", "MODES",
     # scheduler events (docs/async_scheduler.md)
     "SchedulerEvent", "StreamAdmitted", "StreamThrottled", "WindowDone",
-    "StreamDone", "SchedulerError",
+    "StreamDone", "SchedulerError", "EventProtocolError",
+    "EventProtocolValidator",
     # stages
     "CodecFrontend", "CodecStream", "VisualEncoder", "PrefillBackend",
     "PrefillResult", "AttentionPrefill", "RecurrentPrefill", "GreedyDecoder",

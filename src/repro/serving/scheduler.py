@@ -252,7 +252,11 @@ class Scheduler:
         self._throttled: set = set()
         self._t_submit: Dict[int, float] = {}
         self._executor: Optional[ThreadPoolExecutor] = None
-        self._ingest_lock = threading.Lock()
+        # guards stage_busy: the one accumulator both ingest worker
+        # threads and the main loop write (everything else in the
+        # metrics block below is main-thread-only — see the
+        # shared-state inventory in docs/static_analysis.md)
+        self._metrics_lock = threading.Lock()
         self._next_sid = 0
         self._tick = 0
         # -- fleet metrics ---------------------------------------------
@@ -440,8 +444,24 @@ class Scheduler:
             prog.futs.clear()
             prog.next_ingest = prog.next_encode = prog.next_prefill = \
                 prog.sess.next_window
-        self._admit(None)
-        results = self._serve_one_group(None)
+        # events go to the deferred buffer, not to the caller (poll
+        # predates the event API and returns raw WindowResults) — but
+        # they MUST still be emitted, or a consumer that mixes poll()
+        # with events() sees WindowDone/StreamDone with no admission
+        # and the per-stream protocol breaks (tools/check
+        # event-protocol pass; EventProtocolValidator).  The buffer is
+        # delivered by the next step().
+        self._admit(self._event_buffer)
+        results = self._serve_one_group(self._event_buffer)
+        for prog in self._programs.values():
+            # re-sync stage cursors AFTER serving: programs created by
+            # this poll's admission start at window 0, and the lockstep
+            # serve advanced sess.next_window without moving the
+            # pipelined cursors — leaving them behind would make the
+            # next step() re-serve (and re-admit KV pages for) a window
+            # poll already delivered
+            prog.next_ingest = prog.next_encode = prog.next_prefill = \
+                prog.sess.next_window
         self.t_serve += time.perf_counter() - t0
         return results
 
@@ -478,7 +498,7 @@ class Scheduler:
             metas.append(wm)
             t_codecs.append(tc)
         frames = jnp.stack(frames_l, 0)
-        self.stage_busy["ingest"] += time.perf_counter() - t_poll0
+        self._bump_stage("ingest", time.perf_counter() - t_poll0)
 
         # batched-state staging (measured scheduler overhead); singleton
         # groups bypass it — the batch=1 path stays copy-free like the
@@ -537,9 +557,9 @@ class Scheduler:
             results.append(res)
             self.vit_patches += st.vit_patches
             self.vit_slots += st.vit_slots
-            self.stage_busy["encode"] += st.t_vit
-            self.stage_busy["prefill"] += st.t_prefill
-            self.stage_busy["decode"] += st.t_decode
+            self._bump_stage("encode", st.t_vit)
+            self._bump_stage("prefill", st.t_prefill)
+            self._bump_stage("decode", st.t_decode)
             self.window_latencies.setdefault(sess.sid, []).append(
                 now - t_poll0
             )
@@ -576,12 +596,19 @@ class Scheduler:
             self._executor.shutdown(wait=True)
             self._executor = None
 
+    def _bump_stage(self, stage: str, dt: float) -> None:
+        """Accumulate stage-busy wall time.  ``stage_busy`` is the one
+        metrics dict touched from both ingest worker threads
+        (``_ingest_one``) and the main loop, so every access — either
+        side — goes through ``_metrics_lock``; a bare ``+=`` on the
+        shared float is a lost-update race under the pool."""
+        with self._metrics_lock:
+            self.stage_busy[stage] += dt
+
     def _ingest_one(self, sess: StreamSession, k: int):
         t0 = time.perf_counter()
         out = self.pipeline.frontend.window_host(sess.stream, k)
-        dt = time.perf_counter() - t0
-        with self._ingest_lock:
-            self.stage_busy["ingest"] += dt
+        self._bump_stage("ingest", time.perf_counter() - t0)
         return out
 
     def _ensure_ingest(self, prog: _Program) -> None:
@@ -640,7 +667,7 @@ class Scheduler:
         enc = self.pipeline.encode_windows(
             jnp.asarray(np.stack(frames_l, 0)), metas, fresh
         )
-        self.stage_busy["encode"] += enc.t_vit
+        self._bump_stage("encode", enc.t_vit)
         self.kernel_fallbacks += enc.fallbacks
         S = len(progs)
         for i, prog in enumerate(progs):
@@ -725,8 +752,8 @@ class Scheduler:
         # no host sync needed (done streams release at finalize)
         for prog, st in zip(progs, per_states):
             prog.sess.state = st
-        self.stage_busy["prefill"] += pf.t_prefill + t_stage
-        self.stage_busy["decode"] += dec.t_decode
+        self._bump_stage("prefill", pf.t_prefill + t_stage)
+        self._bump_stage("decode", dec.t_decode)
         self.kernel_fallbacks += pf.fallbacks + dec.fallbacks
         shares = [b / tot_staged if tot_staged else 1 / S for b in staged]
         self._inflight.append(
@@ -756,7 +783,7 @@ class Scheduler:
         yes_no = np.asarray(pend.yes_no, np.float64)
         answers = np.asarray(pend.answers).astype(np.int64)
         t_sync = time.perf_counter() - t0
-        self.stage_busy["finalize"] += t_sync
+        self._bump_stage("finalize", t_sync)
         now = time.perf_counter()
         pr = g.pf.pr
         S = len(g.progs)
@@ -855,4 +882,6 @@ class Scheduler:
         exceed 1.0 with multiple worker threads; a lockstep run sums to
         ~1.0 across stages (no overlap by construction)."""
         wall = max(self.t_serve, 1e-9)
-        return {k: v / wall for k, v in self.stage_busy.items()}
+        with self._metrics_lock:
+            busy = dict(self.stage_busy)
+        return {k: v / wall for k, v in busy.items()}

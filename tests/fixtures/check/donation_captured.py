@@ -1,0 +1,26 @@
+"""Donation-linearity seeded violation: a donated bare-name buffer
+captured by a nested closure.  The closure cell keeps the stale leaf
+alive past the donation even though the name is properly rebound.
+``no_capture`` is the clean twin."""
+
+import jax
+
+
+def _donate(*argnums):
+    return argnums
+
+
+def captured(fn, params, tok, caches):
+    jit_decode = jax.jit(fn, donate_argnums=_donate(2))
+    logits, caches = jit_decode(params, tok, caches)
+
+    def debug():
+        return caches.sum()
+
+    return logits, debug
+
+
+def no_capture(fn, params, tok, caches):
+    jit_decode = jax.jit(fn, donate_argnums=_donate(2))
+    logits, caches = jit_decode(params, tok, caches)
+    return logits, caches

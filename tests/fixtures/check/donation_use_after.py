@@ -1,0 +1,37 @@
+"""Donation-linearity seeded violations: a stale read after the
+donating call, a donated buffer that is never rebound, and a local
+alias that survives the call.  ``linear_ok`` is the clean twin —
+rebind-from-result then never touch the stale name."""
+
+import jax
+
+
+def _donate(*argnums):
+    return argnums
+
+
+class Backend:
+    def __init__(self, fn, params):
+        self._jit_fresh = jax.jit(fn, donate_argnums=_donate(1))
+        self.params = params
+
+    def stale_read(self, pool, pt):
+        logits, slab = self._jit_fresh(self.params, pool.slab, pt)
+        stale = pool.slab.sum()      # read after donation, before rebind
+        pool.slab = slab
+        return logits, stale
+
+    def never_rebound(self, pool, pt):
+        logits, _ = self._jit_fresh(self.params, pool.slab, pt)
+        return logits
+
+    def alias_survives(self, pool, pt):
+        keep = pool.slab             # alias bound before the call
+        logits, slab = self._jit_fresh(self.params, pool.slab, pt)
+        pool.slab = slab
+        return logits, keep.sum()    # ...and read after it
+
+    def linear_ok(self, pool, pt):
+        logits, slab = self._jit_fresh(self.params, pool.slab, pt)
+        pool.slab = slab
+        return logits

@@ -1,0 +1,43 @@
+"""Event-protocol seeded violations (static emit-order pass).  The
+event classes are local stubs — the pass matches emit sites by *name*,
+and the fixture must stay ruff-clean, so the names are defined here.
+
+``bad_emit`` seeds two findings: a terminal ``StreamDone`` with a
+non-zero ``n_windows`` and no preceding ``WindowDone``, then a
+``WindowDone`` after the terminal event.  ``good_emit`` is the clean
+ordering; ``zero_window`` is the legal no-window form."""
+
+
+class _Ev:
+    def __init__(self, sid, stream_id, **kw):
+        self.sid = sid
+        self.stream_id = stream_id
+
+
+class StreamAdmitted(_Ev):
+    pass
+
+
+class WindowDone(_Ev):
+    pass
+
+
+class StreamDone(_Ev):
+    pass
+
+
+def bad_emit(events, sess, res):
+    events.append(StreamAdmitted(sess.sid, sess.key))
+    events.append(StreamDone(sess.sid, sess.key, n_windows=sess.n))
+    events.append(WindowDone(sess.sid, sess.key, result=res))
+
+
+def good_emit(events, sess, res):
+    events.append(StreamAdmitted(sess.sid, sess.key))
+    events.append(WindowDone(sess.sid, sess.key, result=res))
+    events.append(StreamDone(sess.sid, sess.key, n_windows=sess.n))
+
+
+def zero_window(events, sess):
+    events.append(StreamAdmitted(sess.sid, sess.key))
+    events.append(StreamDone(sess.sid, sess.key, n_windows=0))

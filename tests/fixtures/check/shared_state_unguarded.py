@@ -1,0 +1,29 @@
+"""Shared-state seeded violations: ``MiniSched`` submits ``_worker``
+to a thread pool; ``self.count`` is mutated from the worker and read
+from the main loop, both unguarded -> two findings.  ``self.busy``
+(every access under the lock) and ``self.cfg`` (thread-read,
+never written after ``__init__``) are the clean classifications."""
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+
+class MiniSched:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.count = 0
+        self.busy = 0.0
+        self._lock = threading.Lock()
+
+    def _worker(self, k):
+        self.count += k * self.cfg.scale
+        with self._lock:
+            self.busy += float(k)
+
+    def kick(self):
+        with ThreadPoolExecutor(max_workers=2) as pool:
+            for k in range(self.cfg.n):
+                pool.submit(self._worker, k)
+
+    def tally(self):
+        return self.count

@@ -1,0 +1,26 @@
+"""The same shared-state violations as ``shared_state_unguarded.py``,
+each suppressed by a reasoned waiver: lints must report nothing (both
+waivers are used, so neither is stale)."""
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+
+class MiniSched:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.count = 0
+        self._lock = threading.Lock()
+
+    def _worker(self, k):
+        # check: allow-shared-state(fixture: benign monotonic counter)
+        self.count += k
+
+    def kick(self):
+        with ThreadPoolExecutor(max_workers=2) as pool:
+            for k in range(self.cfg.n):
+                pool.submit(self._worker, k)
+
+    def tally(self):
+        # check: allow-shared-state(fixture: racy read is informational)
+        return self.count

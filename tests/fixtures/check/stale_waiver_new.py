@@ -1,0 +1,11 @@
+"""Stale waivers for the concurrency-era rules: each suppresses
+nothing and must itself be reported as ``stale-waiver``."""
+
+
+def quiet(x):
+    # check: allow-donation-linearity(left over after a refactor)
+    y = x + 1
+    # check: allow-shared-state(copied from scheduler.py)
+    y += 1
+    # check: allow-event-protocol(superstition)
+    return y

@@ -27,9 +27,10 @@ from repro.models import transformer as tfm
 from repro.models import vit as vitm
 from repro.models.init import ParamBuilder, split_tree
 from repro.serving import (
-    EngineCfg, KVCfg, Scheduler, SchedulerCfg, SchedulerError,
-    ServingPipeline, StreamAdmitted, StreamDone, StreamRequest,
-    StreamThrottled, WindowDone,
+    EngineCfg, EventProtocolError, EventProtocolValidator, KVCfg,
+    Scheduler, SchedulerCfg, SchedulerError, ServingPipeline,
+    StreamAdmitted, StreamDone, StreamRequest, StreamThrottled,
+    WindowDone,
 )
 from repro.serving import config as serving_config
 from repro.serving.scheduler import _concat_states
@@ -63,12 +64,21 @@ def _pipeline(params, vparams, mode, *, paged, pool_streams=None):
                   kv=KVCfg(paged_kv=paged, pool_streams=pool_streams)))
 
 
+def _drain(sched):
+    """Drive ``events()`` to completion under the runtime protocol
+    validator — every consumer in this file goes through it."""
+    validator = EventProtocolValidator()
+    events = list(validator.wrap(sched.events()))
+    validator.assert_complete()
+    return events
+
+
 def _serve_events(pipe, streams, *, pipelined, max_concurrent=N_STREAMS):
     """Drive the event loop; returns (per-sid window logits, events)."""
     sched = Scheduler(pipe, SchedulerCfg(max_concurrent=max_concurrent,
                                          pipelined=pipelined))
     sids = [sched.submit(StreamRequest(i, f)) for i, f in enumerate(streams)]
-    events = list(sched.events())
+    events = _drain(sched)
     answers = {
         sid: [tuple(np.asarray(r.stats.logits_yes_no).tolist())
               for r in sched.session(sid).results]
@@ -129,7 +139,7 @@ def test_event_ordering_invariants(stack, pipelined):
                                          pipelined=pipelined))
     sids = [sched.submit(StreamRequest(i, f))
             for i, f in enumerate(streams)]
-    events = list(sched.events())
+    events = _drain(sched)
     # 16 frames, window 8, stride 4 -> 3 windows per stream
     _check_event_invariants(events, sids, n_windows=3)
 
@@ -144,7 +154,7 @@ def test_throttle_events_under_pinned_pool(stack):
     sched = Scheduler(pipe, SchedulerCfg(max_concurrent=2, pipelined=True))
     sids = [sched.submit(StreamRequest(i, f))
             for i, f in enumerate(streams)]
-    events = list(sched.events())
+    events = _drain(sched)
     throttled = {e.sid for e in events if isinstance(e, StreamThrottled)}
     assert throttled, "pinned pool never throttled admission"
     admitted = {e.sid for e in events if isinstance(e, StreamAdmitted)}
@@ -163,10 +173,83 @@ def test_zero_window_stream_emits_done(stack):
     sched = Scheduler(pipe, SchedulerCfg(max_concurrent=1))
     short = np.zeros((CODEC.window_frames - 1, 112, 112), np.float32)
     sid = sched.submit(StreamRequest("short", short))
-    events = list(sched.events())
+    events = _drain(sched)
     dones = [e for e in events if isinstance(e, StreamDone)]
     assert len(dones) == 1 and dones[0].sid == sid
     assert dones[0].n_windows == 0
+
+
+# ----------------------------------------------------------------------
+# runtime event-protocol validator
+# ----------------------------------------------------------------------
+def test_event_protocol_validator_rejects_out_of_order():
+    """Synthetic event streams that break the per-stream protocol must
+    be rejected at the first offending event."""
+    from types import SimpleNamespace
+
+    def window_done(sid, k):
+        return WindowDone(sid, "s", result=SimpleNamespace(window=k))
+
+    # WindowDone before admission
+    with pytest.raises(EventProtocolError, match="before StreamAdmitted"):
+        EventProtocolValidator().check(window_done(0, 0))
+
+    # out-of-order window indices
+    v = EventProtocolValidator()
+    v.check(StreamAdmitted(0, "s"))
+    v.check(window_done(0, 0))
+    with pytest.raises(EventProtocolError, match="out of order"):
+        v.check(window_done(0, 2))
+
+    # throttle after admission
+    v = EventProtocolValidator()
+    v.check(StreamAdmitted(0, "s"))
+    with pytest.raises(EventProtocolError, match="only precede admission"):
+        v.check(StreamThrottled(0, "s"))
+
+    # anything after the terminal StreamDone
+    v = EventProtocolValidator()
+    v.check(StreamAdmitted(0, "s"))
+    v.check(window_done(0, 0))
+    v.check(StreamDone(0, "s", n_windows=1))
+    with pytest.raises(EventProtocolError, match="after terminal"):
+        v.check(window_done(0, 1))
+
+    # n_windows must match the windows actually delivered
+    v = EventProtocolValidator()
+    v.check(StreamAdmitted(0, "s"))
+    with pytest.raises(EventProtocolError, match="n_windows=2"):
+        v.check(StreamDone(0, "s", n_windows=2))
+
+    # an admitted stream with no StreamDone fails completeness
+    v = EventProtocolValidator()
+    v.check(StreamAdmitted(0, "s"))
+    with pytest.raises(EventProtocolError, match="missing"):
+        v.assert_complete()
+
+
+def test_poll_then_events_stays_protocol_valid(stack):
+    """poll() predates the event API; the windows it serves must still
+    emit (deferred) events so a consumer that mixes poll() with
+    events() sees a protocol-valid per-stream sequence — admission and
+    the poll-served WindowDones arrive buffered on the next step()."""
+    params, vparams, streams = stack
+    pipe = _pipeline(params, vparams, "codecflow", paged=True)
+    sched = Scheduler(pipe, SchedulerCfg(max_concurrent=N_STREAMS))
+    sids = [sched.submit(StreamRequest(i, f))
+            for i, f in enumerate(streams)]
+    with pytest.warns(DeprecationWarning, match="poll"):
+        first = sched.poll()           # one fused group via the shim
+    assert first, "poll shim served nothing"
+    events = _drain(sched)             # validator-wrapped events()
+    admitted = {e.sid for e in events if isinstance(e, StreamAdmitted)}
+    done = {e.sid for e in events if isinstance(e, StreamDone)}
+    assert admitted == done == set(sids)
+    # the poll-served window 0 was delivered as an event, in order
+    for sid in sids:
+        windows = [e.window for e in events
+                   if isinstance(e, WindowDone) and e.sid == sid]
+        assert windows == list(range(3)), (sid, windows)
 
 
 # ----------------------------------------------------------------------

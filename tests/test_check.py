@@ -20,9 +20,12 @@ for p in (ROOT, ROOT / "src"):
 
 from tools.check import lints  # noqa: E402
 from tools.check.lints import (  # noqa: E402
+    RULE_DONATION,
     RULE_DTYPE,
+    RULE_EVENTS,
     RULE_HOST_SYNC,
     RULE_RECOMPILE,
+    RULE_SHARED,
     RULE_STALE,
 )
 
@@ -113,6 +116,115 @@ def test_stale_waiver_reported():
     assert [f.rule for f in fs] == [RULE_STALE]
     assert "suppresses nothing" in fs[0].message
     assert "left over after a refactor" in fs[0].message
+
+
+# ----------------------------------------------------------------------
+# concurrency-era passes: donation / shared-state / event-protocol
+# ----------------------------------------------------------------------
+def test_donation_use_after_fixture():
+    fs = _lint("donation_use_after.py")
+    assert [f.rule for f in fs] == [RULE_DONATION] * 3
+    msgs = [f.message for f in fs]
+    assert any("read of donated buffer 'pool.slab'" in m for m in msgs)
+    assert any("never rebound" in m for m in msgs)
+    assert any("alias 'keep'" in m and "survives" in m for m in msgs)
+    # linear_ok (rebind then hands off) contributes nothing
+    src = (FIXTURES / "donation_use_after.py").read_text()
+    ok_line = next(
+        i for i, l in enumerate(src.splitlines(), 1)
+        if "def linear_ok" in l
+    )
+    assert all(f.line < ok_line for f in fs)
+
+
+def test_donation_captured_fixture():
+    fs = _lint("donation_captured.py")
+    assert [f.rule for f in fs] == [RULE_DONATION]
+    assert "captured by nested closure 'debug'" in fs[0].message
+
+
+def test_shared_state_unguarded_fixture():
+    fs = _lint("shared_state_unguarded.py")
+    assert [f.rule for f in fs] == [RULE_SHARED] * 2
+    msgs = " | ".join(f.message for f in fs)
+    assert "worker-thread mutation" in msgs
+    assert "main-loop read" in msgs
+    assert "'MiniSched.count'" in msgs
+    # the lock-guarded twin (busy) and immutable cfg are not flagged
+    assert "busy" not in msgs and "cfg" not in msgs
+
+
+def test_shared_state_waiver_suppresses():
+    assert _lint("shared_state_waived.py") == []
+
+
+def test_shared_state_inventory_rows():
+    import ast
+
+    from tools.check import concurrency
+
+    src = (FIXTURES / "shared_state_unguarded.py").read_text()
+    _, rows = concurrency.analyze(ast.parse(src), "fixture")
+    by_attr = {r.attr: r for r in rows}
+    assert by_attr["count"].label == "VIOLATION"
+    assert by_attr["count"].thread_rw == "-W"
+    assert by_attr["count"].main_rw == "R-"
+    assert by_attr["busy"].label == "lock-guarded"
+    assert by_attr["cfg"].label == "immutable-after-init"
+
+
+def test_events_order_fixture():
+    fs = _lint("events_order.py")
+    assert [f.rule for f in fs] == [RULE_EVENTS] * 2
+    msgs = " | ".join(f.message for f in fs)
+    assert "no preceding WindowDone" in msgs
+    assert "after StreamDone" in msgs
+    # good_emit and the n_windows=0 zero-window form are not flagged
+    assert all("bad_emit" in f.message for f in fs)
+
+
+def test_stale_waivers_cover_new_rules():
+    fs = _lint("stale_waiver_new.py")
+    assert [f.rule for f in fs] == [RULE_STALE] * 3
+    msgs = " | ".join(f.message for f in fs)
+    for rule in (RULE_DONATION, RULE_SHARED, RULE_EVENTS):
+        assert f"allow-{rule}" in msgs
+
+
+def test_donation_sites_tracked_on_real_tree():
+    """The pass must actually *see* the serving donation sites — an
+    empty site table would mean the registry regressed, and linearity
+    was vacuously true."""
+    import ast
+
+    from tools.check import donation
+
+    src = (ROOT / "src/repro/serving/api.py").read_text()
+    findings, sites = donation.analyze(ast.parse(src), "api.py")
+    assert findings == []
+    callees = {s.callee for s in sites}
+    assert {"_jit_paged_fresh", "_jit_paged_reuse", "_jit_demote",
+            "_jit_decode_paged", "jit_selective"} <= callees
+    assert all(s.status == "linear" for s in sites)
+
+
+def test_scheduler_inventory_on_real_tree():
+    """stage_busy (the one attr both ingest workers and the main loop
+    write) must classify lock-guarded; the metrics accumulators the
+    issue asked to audit must be main-thread-only, not violations."""
+    import ast
+
+    from tools.check import concurrency
+
+    src = (ROOT / "src/repro/serving/scheduler.py").read_text()
+    findings, rows = concurrency.analyze(ast.parse(src), "scheduler.py")
+    assert findings == []
+    by_attr = {r.attr: r for r in rows if r.cls == "Scheduler"}
+    assert by_attr["stage_busy"].label == "lock-guarded"
+    for attr in ("kernel_fallbacks", "window_latencies", "ttft",
+                 "windows_served", "vit_patches", "vit_slots"):
+        assert by_attr[attr].label == "main-thread-only", attr
+    assert by_attr["pipeline"].label == "immutable-after-init"
 
 
 # ----------------------------------------------------------------------

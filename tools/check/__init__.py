@@ -1,12 +1,15 @@
-"""Kernel-contract + tracing-hygiene static analyzer.
+"""Kernel-contract + tracing-hygiene + concurrency static analyzer.
 
 Usage: ``python -m tools.check src benchmarks`` (see cli.py).
 """
 from .lints import (  # noqa: F401
     ALL_RULES,
+    RULE_DONATION,
     RULE_DTYPE,
+    RULE_EVENTS,
     RULE_HOST_SYNC,
     RULE_RECOMPILE,
+    RULE_SHARED,
     RULE_STALE,
     Finding,
     lint_paths,

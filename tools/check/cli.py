@@ -1,27 +1,81 @@
 """Command-line driver: ``python -m tools.check [paths...]``.
 
 Runs, in order:
-  1. the AST tracing-hygiene lints over the given paths (default:
-     ``src benchmarks``),
+  1. the AST lints over the given paths (default: ``src benchmarks``)
+     — tracing hygiene plus the donation-linearity / shared-state /
+     event-protocol concurrency passes,
   2. the abstract-eval dispatch auditor (kernel-vs-oracle coverage),
   3. the recompile-budget auditor (bucket-scheme compile-key counts).
 
 Exit code 0 iff no lint finding and no audit failure.  ``--summary``
-writes the dispatch coverage table (plus budget lines) as markdown —
-CI appends it to the step summary and uploads it as an artifact.
+writes the dispatch coverage table, budget lines, shared-state
+inventory, and donation-site table as markdown — CI appends it to the
+step summary and uploads it as an artifact.
 """
 
 from __future__ import annotations
 
 import argparse
+import ast
 import json
 import sys
 from pathlib import Path
 from typing import List, Optional, Sequence
 
-from . import lints
+from . import concurrency, donation, lints
 
 DEFAULT_PATHS = ("src", "benchmarks")
+
+
+def collect_tables(paths: Sequence[str]):
+    """Donation-site rows + shared-state inventory rows over ``paths``
+    (re-running just the two passes that produce tables; findings are
+    already folded into ``lint_paths``)."""
+    sites: List[donation.Site] = []
+    inventory: List[concurrency.AttrRow] = []
+    for f in lints.iter_py_files(paths):
+        try:
+            tree = ast.parse(f.read_text(), filename=str(f))
+        except SyntaxError:
+            continue
+        _, s = donation.analyze(tree, str(f))
+        sites.extend(s)
+        _, rows = concurrency.analyze(tree, str(f))
+        inventory.extend(rows)
+    return sites, inventory
+
+
+def donation_table(sites: Sequence[donation.Site]) -> str:
+    lines = [
+        "| site | callee | argnum | donated buffer | status |",
+        "|---|---|---|---|---|",
+    ]
+    for s in sites:
+        lines.append(
+            f"| `{s.path}:{s.line}` | `{s.callee}` | {s.argnum} "
+            f"| `{s.buffer}` | {s.status} |"
+        )
+    if not sites:
+        lines.append("| _no donation sites found_ | | | | |")
+    return "\n".join(lines)
+
+
+def inventory_table(rows: Sequence[concurrency.AttrRow]) -> str:
+    lines = [
+        "| attribute | threads | main loop | classification |",
+        "|---|---|---|---|",
+    ]
+    for r in rows:
+        label = r.label
+        if r.violations:
+            label += f" (lines {', '.join(map(str, r.violations))})"
+        lines.append(
+            f"| `{r.cls}.{r.attr}` | {r.thread_rw} | {r.main_rw} "
+            f"| {label} |"
+        )
+    if not rows:
+        lines.append("| _no thread-spawning classes found_ | | | |")
+    return "\n".join(lines)
 
 
 def _ensure_repro_importable() -> None:
@@ -82,16 +136,23 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         for fail in audit_failures:
             print(f"AUDIT FAILURE: {fail}")
 
+    sites, inventory = collect_tables(args.paths)
+
     if args.summary:
         md = ["## Kernel dispatch coverage", "", table, ""]
         md += ["## Recompile budgets", ""]
         md += [f"- {r.render()}" for r in budget_results]
-        md += ["", f"## Lints: {len(findings)} finding(s)", ""]
+        md += ["", "## Shared-state inventory", "",
+               inventory_table(inventory), ""]
+        md += ["## Donation sites", "", donation_table(sites), ""]
+        md += [f"## Lints: {len(findings)} finding(s)", ""]
         md += [f"- `{f.render()}`" for f in findings]
         Path(args.summary).write_text("\n".join(md) + "\n")
     if args.json:
         payload = {
             "findings": [f.__dict__ for f in findings],
+            "donation_sites": [s.__dict__ for s in sites],
+            "shared_state": [r.__dict__ for r in inventory],
             "dispatch": [r.__dict__ for r in audit_rows],
             "budgets": [
                 {

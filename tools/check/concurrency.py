@@ -1,0 +1,308 @@
+"""Thread-shared-state discipline pass (rule ``shared-state``).
+
+The stage-pipelined scheduler (docs/async_scheduler.md) hands ingest
+work to ``ThreadPoolExecutor`` workers while the main loop keeps
+batching, dispatching, and mutating KV-pool bookkeeping.  The bitwise
+async==lockstep guarantee only holds while worker threads and the main
+loop never race on shared mutable state — an invariant nothing
+enforced until this pass.
+
+For every class that submits one of its own methods to an executor or
+``threading.Thread`` this pass:
+
+1. computes the set of methods reachable from the submission targets
+   (transitive closure over ``self.<m>()`` calls inside the class);
+2. inventories every ``self.<attr>`` access in the class, split into
+   reads/writes, thread-reachable vs main-loop, and lock-guarded
+   (lexically inside ``with self.<lock>:`` where ``<lock>`` is bound
+   to ``threading.Lock()``/``RLock()`` in ``__init__``) or not;
+3. classifies each attribute: ``lock-guarded`` / ``immutable-after-init``
+   / ``main-thread-only`` / ``VIOLATION``.  An attribute touched by
+   thread-reachable code AND mutated after ``__init__`` is
+   shared-mutable: *every* post-init access site must be lock-guarded
+   or carry ``# check: allow-shared-state(<reason>)``.
+
+It also statically encodes the repo's thread-affinity contracts: KV
+pool free-list mutation (``core/kv_pool.py``) and device dispatch are
+scheduler-thread-only, so thread-reachable code calling any of
+``_THREAD_FORBIDDEN`` is flagged regardless of locking — a lock does
+not make JAX dispatch ordering or donation linearity thread-safe.
+
+The inventory rows feed the CI step summary (``cli.py --summary``).
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+RULE_SHARED = "shared-state"
+
+# method names whose call mutates the receiver in place
+_MUTATORS = {
+    "append", "appendleft", "add", "update", "pop", "popleft", "popitem",
+    "remove", "discard", "clear", "extend", "insert", "setdefault",
+    "sort", "reverse", "__setitem__",
+}
+
+# scheduler-thread-only entry points: KVPool free-list bookkeeping and
+# device-dispatching pipeline stages (docs/paged_kv.md §Thread affinity)
+_THREAD_FORBIDDEN = {
+    "admit", "admit_streams", "evict", "demote", "unreserve_cold",
+    "ensure_pool", "ensure_capacity", "release_state",
+    "encode_windows", "prefill_windows", "decode_windows", "serve_batch",
+}
+
+
+@dataclass
+class Access:
+    attr: str
+    line: int
+    write: bool
+    guarded: bool
+    method: str
+    threaded: bool
+    in_init: bool
+
+
+@dataclass
+class AttrRow:
+    """One shared-state inventory row for the CI summary."""
+    cls: str
+    attr: str
+    thread_rw: str
+    main_rw: str
+    label: str
+    violations: List[int] = field(default_factory=list)
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return node.attr
+    return None
+
+
+def _is_lock_ctor(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    f = node.func
+    name = f.attr if isinstance(f, ast.Attribute) else (
+        f.id if isinstance(f, ast.Name) else None
+    )
+    return name in ("Lock", "RLock")
+
+
+def _submission_targets(cls: ast.ClassDef) -> Set[str]:
+    """Method names of ``cls`` handed to executors / Thread()."""
+    targets: Set[str] = set()
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        # pool.submit(self.meth, ...) / executor.submit(self.meth, ...)
+        if isinstance(f, ast.Attribute) and f.attr == "submit" and node.args:
+            a = _self_attr(node.args[0])
+            if a:
+                targets.add(a)
+        # threading.Thread(target=self.meth) / Thread(target=self.meth)
+        name = f.attr if isinstance(f, ast.Attribute) else (
+            f.id if isinstance(f, ast.Name) else None
+        )
+        if name == "Thread":
+            for kw in node.keywords:
+                if kw.arg == "target":
+                    a = _self_attr(kw.value)
+                    if a:
+                        targets.add(a)
+    return targets
+
+
+def _reachable(cls: ast.ClassDef, entries: Set[str]) -> Set[str]:
+    methods = {
+        n.name: n for n in cls.body
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    }
+    seen: Set[str] = set()
+    stack = [m for m in entries if m in methods]
+    while stack:
+        m = stack.pop()
+        if m in seen:
+            continue
+        seen.add(m)
+        for node in ast.walk(methods[m]):
+            if isinstance(node, ast.Call):
+                a = _self_attr(node.func)
+                if a and a in methods and a not in seen:
+                    stack.append(a)
+    return seen
+
+
+class _MethodScan:
+    """Collect self-attr accesses in one method, with lock context."""
+
+    def __init__(self, meth, lock_attrs: Set[str], method_names: Set[str],
+                 threaded: bool):
+        self.accesses: List[Access] = []
+        self.calls: List[Tuple[str, int]] = []  # (terminal attr, line)
+        self._locks = lock_attrs
+        self._methods = method_names
+        self._meth = meth
+        self._threaded = threaded
+        self._walk(meth.body, guarded=False)
+
+    def _walk(self, stmts, guarded: bool) -> None:
+        for s in stmts:
+            g = guarded
+            if isinstance(s, ast.With):
+                held = any(
+                    (a := _self_attr(it.context_expr)) and a in self._locks
+                    for it in s.items
+                )
+                g = guarded or held
+            # expressions of this statement (headers included), nested
+            # suites walked with the updated guard state
+            for child in ast.iter_child_nodes(s):
+                if isinstance(child, ast.stmt):
+                    continue
+                self._scan_expr(child, s, g)
+            for fld in ("body", "orelse", "finalbody"):
+                sub = getattr(s, fld, None)
+                if sub:
+                    self._walk(sub, g)
+            for h in getattr(s, "handlers", []) or []:
+                self._walk(h.body, g)
+
+    def _scan_expr(self, node: ast.AST, stmt: ast.stmt, guarded: bool):
+        for n in ast.walk(node):
+            if isinstance(n, ast.Call):
+                f = n.func
+                term = f.attr if isinstance(f, ast.Attribute) else (
+                    f.id if isinstance(f, ast.Name) else None
+                )
+                if term:
+                    self.calls.append((term, n.lineno))
+            a = _self_attr(n)
+            if a is None or a in self._locks or a in self._methods:
+                continue
+            # mutation-through-method (self.attr.append(...)) and
+            # subscript stores are promoted to writes by the second
+            # structural pass below
+            write = isinstance(n.ctx, (ast.Store, ast.Del))
+            self.accesses.append(Access(
+                a, n.lineno, write, guarded, self._meth.name,
+                self._threaded, self._meth.name == "__init__",
+            ))
+        # second structural pass for mutation-through-method and
+        # subscript stores on self attrs
+        for n in ast.walk(node):
+            if (
+                isinstance(n, ast.Call)
+                and isinstance(n.func, ast.Attribute)
+                and n.func.attr in _MUTATORS
+            ):
+                a = _self_attr(n.func.value)
+                if a and a not in self._locks and a not in self._methods:
+                    self._mark_write(a, n.lineno)
+            if isinstance(n, ast.Subscript) and isinstance(
+                n.ctx, (ast.Store, ast.Del)
+            ):
+                a = _self_attr(n.value)
+                if a and a not in self._locks and a not in self._methods:
+                    self._mark_write(a, n.lineno)
+
+    def _mark_write(self, attr: str, line: int) -> None:
+        for acc in self.accesses:
+            if acc.attr == attr and acc.line == line:
+                acc.write = True
+                return
+
+
+def analyze(tree: ast.Module, path: str):
+    """-> (findings as (line, message) tuples, [AttrRow] inventory)."""
+    findings: List[Tuple[int, str]] = []
+    rows: List[AttrRow] = []
+    for cls in [n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)]:
+        entries = _submission_targets(cls)
+        if not entries:
+            continue
+        methods = {
+            n.name: n for n in cls.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        threaded = _reachable(cls, entries)
+        lock_attrs: Set[str] = set()
+        init = methods.get("__init__")
+        if init is not None:
+            for node in ast.walk(init):
+                if isinstance(node, ast.Assign) and _is_lock_ctor(node.value):
+                    for t in node.targets:
+                        a = _self_attr(t)
+                        if a:
+                            lock_attrs.add(a)
+
+        accesses: List[Access] = []
+        deny: List[Tuple[int, str, str]] = []
+        for name, meth in methods.items():
+            scan = _MethodScan(
+                meth, lock_attrs, set(methods), threaded=name in threaded
+            )
+            accesses.extend(scan.accesses)
+            if name in threaded:
+                for term, line in scan.calls:
+                    if term in _THREAD_FORBIDDEN:
+                        deny.append((line, name, term))
+
+        by_attr: Dict[str, List[Access]] = {}
+        for acc in accesses:
+            by_attr.setdefault(acc.attr, []).append(acc)
+
+        for attr in sorted(by_attr):
+            accs = by_attr[attr]
+            post = [a for a in accs if not a.in_init]
+            t_r = any(a.threaded and not a.write for a in post)
+            t_w = any(a.threaded and a.write for a in post)
+            m_r = any(not a.threaded and not a.write for a in post)
+            m_w = any(not a.threaded and a.write for a in post)
+            mutated = t_w or m_w
+            thread_touched = t_r or t_w
+            unguarded = [a for a in post if not a.guarded]
+            if not thread_touched:
+                label = "main-thread-only"
+            elif not mutated:
+                label = "immutable-after-init"
+            elif not unguarded:
+                label = "lock-guarded"
+            else:
+                label = "VIOLATION"
+            row = AttrRow(
+                cls.name, attr,
+                ("R" if t_r else "-") + ("W" if t_w else "-"),
+                ("R" if m_r else "-") + ("W" if m_w else "-"),
+                label,
+            )
+            if label == "VIOLATION":
+                for a in unguarded:
+                    row.violations.append(a.line)
+                    where = "worker-thread" if a.threaded else "main-loop"
+                    kind = "mutation" if a.write else "read"
+                    findings.append((a.line, (
+                        f"unguarded {where} {kind} of shared-mutable "
+                        f"attribute '{cls.name}.{attr}' in "
+                        f"{a.method}() — lock it, make it "
+                        f"immutable-after-init, or waive with a reason"
+                    )))
+            rows.append(row)
+
+        for line, meth, term in deny:
+            findings.append((line, (
+                f"thread-reachable {cls.name}.{meth}() calls '{term}()', "
+                f"a scheduler-thread-only entry point (KV-pool "
+                f"bookkeeping / device dispatch) — move it to the main "
+                f"loop or waive with a reason"
+            )))
+    return findings, rows

@@ -1,0 +1,385 @@
+"""Donation-linearity dataflow pass (rule ``donation-linearity``).
+
+The paged serving path threads the shared KV slab *functionally*
+through jitted calls that donate it (``jax.jit(fn,
+donate_argnums=_donate(k))``): on TPU/GPU the donated input buffer is
+invalidated the moment the call is dispatched, so the ONLY correct
+continuation is to rebind the donated name from the call's result and
+never touch the stale reference again (docs/async_scheduler.md
+§Donation).  CPU ignores donation, which is exactly why these bugs
+ship silently — the tests pass on the CPU CI host and the serving
+fleet crashes (or worse, reads freed memory) on the accelerator.
+
+For every call site of a donating jitted callable this pass verifies,
+per donated positional argument whose expression is a simple dotted
+name (``caches``, ``pool.slab``, ``self.pool.slab``):
+
+* **rebinding** — the donated name is rebound from the call's result on
+  every control-flow path out of the call: either the name is itself a
+  target of the call's assignment (``caches, ... = jit(caches, ...)``)
+  or a later ``<name> = <result>`` store whose block dominates the
+  call's block (same suite or an enclosing suite, after the call).  A
+  store only on one branch of a conditional does not dominate.
+* **no stale reads** — the donated name is not loaded between the call
+  and its rebinding (or anywhere after the call when it is never
+  rebound).
+* **no surviving aliases** — a local bound to the same dotted
+  expression before the call (``slab = pool.slab``) is not read after
+  the donating call.
+* **no closure capture** — a bare-name donated buffer is not a free
+  variable of any nested def/lambda in the enclosing function (the
+  closure cell would observe rebinding races, and jit closures trace
+  the stale constant).
+
+Known limitation (documented, deliberate): the analysis is
+line-ordered within one function, so a read that is textually before
+the donating call but executes after it via loop back-edge is not
+seen.  Keep donation calls and their rebinding adjacent.
+
+Waive a site with ``# check: allow-donation-linearity(<reason>)``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+RULE_DONATION = "donation-linearity"
+
+# mutation methods never legal on a stale donated buffer; reads are
+# flagged uniformly so we do not distinguish
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a``, ``a.b``, ``self.a.b`` -> dotted string; else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _donated_argnums(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """Argnums of a ``jax.jit(..., donate_argnums=...)`` expression.
+
+    Recognized forms: a literal int/tuple, or ``_donate(...)`` /
+    ``api._donate(...)`` with constant int args (the repo's
+    CPU-disabling helper — donation invariants must hold on every
+    backend, so the helper is treated as always-donating).  Dynamic
+    expressions return None (site skipped)."""
+    if not (isinstance(call.func, ast.Attribute) and call.func.attr == "jit"):
+        return None
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return (v.value,)
+        if isinstance(v, ast.Tuple) and all(
+            isinstance(e, ast.Constant) and isinstance(e.value, int)
+            for e in v.elts
+        ):
+            return tuple(e.value for e in v.elts)
+        if isinstance(v, ast.Call):
+            fname = (
+                v.func.id if isinstance(v.func, ast.Name)
+                else v.func.attr if isinstance(v.func, ast.Attribute)
+                else None
+            )
+            if fname == "_donate" and all(
+                isinstance(a, ast.Constant) and isinstance(a.value, int)
+                for a in v.args
+            ):
+                return tuple(a.value for a in v.args)
+        return None  # dynamic donate_argnums: cannot resolve statically
+    return None
+
+
+class _Registry(ast.NodeVisitor):
+    """Names / self-attributes bound to donating jitted callables."""
+
+    def __init__(self, tree: ast.Module):
+        self.attrs: Dict[str, Tuple[int, ...]] = {}   # self.<attr>
+        self.names: Dict[str, Tuple[int, ...]] = {}   # bare names
+        self.visit(tree)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        argnums: Optional[Tuple[int, ...]] = None
+        if isinstance(node.value, ast.Call):
+            argnums = _donated_argnums(node.value)
+        if argnums is None:
+            # alias of a donating attribute, e.g.
+            # ``f = self._jit_x if cond else self._jit_y`` — donating if
+            # ANY loaded attribute in the value is registered
+            found: Set[int] = set()
+            for n in ast.walk(node.value):
+                if (
+                    isinstance(n, ast.Attribute)
+                    and isinstance(n.ctx, ast.Load)
+                    and n.attr in self.attrs
+                    and isinstance(n.value, ast.Name)
+                    and n.value.id == "self"
+                ):
+                    found.update(self.attrs[n.attr])
+            argnums = tuple(sorted(found)) if found else None
+        if argnums:
+            for t in node.targets:
+                if (
+                    isinstance(t, ast.Attribute)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id == "self"
+                ):
+                    self.attrs[t.attr] = argnums
+                elif isinstance(t, ast.Name):
+                    self.names[t.id] = argnums
+        self.generic_visit(node)
+
+
+def _stmt_map(fn: ast.AST):
+    """(statement, block-chain) pairs in source order.
+
+    The chain identifies the suite a statement belongs to as a tuple of
+    ``(id(parent_stmt), field)`` hops; a chain that is a prefix of
+    another dominates it (runs on every path through it)."""
+    out: List[Tuple[ast.stmt, Tuple]] = []
+
+    def walk(stmts: Sequence[ast.stmt], chain: Tuple) -> None:
+        for s in stmts:
+            out.append((s, chain))
+            for field in ("body", "orelse", "finalbody"):
+                sub = getattr(s, field, None)
+                if sub and not isinstance(
+                    s, (ast.FunctionDef, ast.AsyncFunctionDef)
+                ):
+                    walk(sub, chain + ((id(s), field),))
+            for h in getattr(s, "handlers", []) or []:
+                walk(h.body, chain + ((id(s), "handler"),))
+
+    walk(fn.body, ())
+    return out
+
+
+def _own_exprs(stmt: ast.stmt) -> List[ast.AST]:
+    """The statement's own expression children — nested statements are
+    separate entries of the statement map, so descending into them here
+    would double-count every occurrence."""
+    return [
+        c for c in ast.iter_child_nodes(stmt) if not isinstance(c, ast.stmt)
+    ]
+
+
+def _loads_in(stmt: ast.stmt, dotted: str) -> List[int]:
+    """Line numbers of Load occurrences of ``dotted`` among the
+    statement's own expressions (nested statements and nested function
+    bodies excluded — closures are handled apart)."""
+    lines = []
+    stack: List[ast.AST] = list(_own_exprs(stmt))
+    while stack:
+        n = stack.pop()
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue
+        if isinstance(n, (ast.Attribute, ast.Name)) and isinstance(
+            getattr(n, "ctx", None), ast.Load
+        ):
+            if _dotted(n) == dotted:
+                lines.append(n.lineno)
+                continue  # do not descend: a.b.c contains a.b
+        stack.extend(ast.iter_child_nodes(n))
+    return lines
+
+
+def _stores_of(stmt: ast.stmt, dotted: str) -> bool:
+    if isinstance(stmt, ast.Assign):
+        return any(_dotted(t) == dotted for t in stmt.targets)
+    return False
+
+
+def _free_names(fn: ast.AST) -> Set[str]:
+    params = set()
+    args = fn.args
+    for a in (
+        list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs)
+        + ([args.vararg] if args.vararg else [])
+        + ([args.kwarg] if args.kwarg else [])
+    ):
+        params.add(a.arg)
+    assigned, loaded = set(), set()
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    for stmt in body:
+        for n in ast.walk(stmt):
+            if isinstance(n, ast.Name):
+                if isinstance(n.ctx, ast.Store):
+                    assigned.add(n.id)
+                else:
+                    loaded.add(n.id)
+    return loaded - params - assigned
+
+
+class Site:
+    """One donated argument of one donating call site (table row)."""
+
+    def __init__(self, path, line, callee, argnum, buffer, status):
+        self.path = path
+        self.line = line
+        self.callee = callee
+        self.argnum = argnum
+        self.buffer = buffer
+        self.status = status
+
+
+def analyze(tree: ast.Module, path: str):
+    """-> (findings as (line, message) tuples, [Site] table rows)."""
+    reg = _Registry(tree)
+    findings: List[Tuple[int, str]] = []
+    sites: List[Site] = []
+    if not reg.attrs and not reg.names:
+        return findings, sites
+
+    funcs = [
+        n for n in ast.walk(tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    ]
+    for fn in funcs:
+        stmts = _stmt_map(fn)
+        nested = [
+            n for n in ast.walk(fn)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda))
+            and n is not fn
+        ]
+        # statement owning each call node: only the statement's own
+        # expressions, so a call in a loop body belongs to the inner
+        # statement, not also to the loop header
+        for stmt, chain in stmts:
+            calls = [
+                n for e in _own_exprs(stmt) for n in ast.walk(e)
+                if isinstance(n, ast.Call)
+            ]
+            for call in calls:
+                callee, argnums = None, None
+                f = call.func
+                if (
+                    isinstance(f, ast.Attribute)
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id == "self"
+                    and f.attr in reg.attrs
+                ):
+                    callee, argnums = f.attr, reg.attrs[f.attr]
+                elif isinstance(f, ast.Name) and f.id in reg.names:
+                    callee, argnums = f.id, reg.names[f.id]
+                if callee is None:
+                    continue
+                targets: List[str] = []
+                if isinstance(stmt, ast.Assign) and stmt.value is call:
+                    for t in stmt.targets:
+                        if isinstance(t, ast.Tuple):
+                            targets += [d for e in t.elts
+                                        if (d := _dotted(e))]
+                        else:
+                            d = _dotted(t)
+                            if d:
+                                targets.append(d)
+                for k in argnums:
+                    if k >= len(call.args):
+                        continue
+                    buf = _dotted(call.args[k])
+                    if buf is None:
+                        continue  # temporary expression: nothing can alias
+                    fnds = _check_site(
+                        stmts, nested, stmt, chain, call, buf, targets
+                    )
+                    findings.extend(fnds)
+                    sites.append(Site(
+                        path, call.lineno, callee, k, buf,
+                        "linear" if not fnds else "FLAGGED",
+                    ))
+    return findings, sites
+
+
+def _check_site(stmts, nested, call_stmt, call_chain, call, buf, targets):
+    out: List[Tuple[int, str]] = []
+    line = call.lineno
+
+    # -- rebinding ------------------------------------------------------
+    rebind_line: Optional[int] = None
+    conditional_store = None
+    if buf in targets:
+        rebind_line = line
+    else:
+        for stmt, chain in stmts:
+            if stmt.lineno <= call_stmt.lineno or not _stores_of(stmt, buf):
+                continue
+            dominates = chain == call_chain[: len(chain)]
+            if dominates:
+                rebind_line = stmt.lineno
+                break
+            conditional_store = conditional_store or stmt.lineno
+    if rebind_line is None:
+        if conditional_store is not None:
+            out.append((line, (
+                f"donated buffer '{buf}' is only rebound on one "
+                f"control-flow path (store at line {conditional_store}) — "
+                f"the donating call invalidates it on every path"
+            )))
+        else:
+            out.append((line, (
+                f"donated buffer '{buf}' is never rebound from the "
+                f"donating call's result — the stale reference now "
+                f"points at freed device memory on donating backends"
+            )))
+
+    # -- stale reads ----------------------------------------------------
+    horizon = rebind_line if rebind_line is not None else float("inf")
+    for stmt, _ in stmts:
+        if stmt is call_stmt:
+            continue
+        for ln in _loads_in(stmt, buf):
+            if call_stmt.lineno < ln <= horizon and ln != rebind_line:
+                out.append((ln, (
+                    f"read of donated buffer '{buf}' after the donating "
+                    f"call at line {line} and before its rebinding"
+                )))
+
+    # -- surviving aliases ----------------------------------------------
+    for stmt, _ in stmts:
+        if stmt.lineno >= call_stmt.lineno or not isinstance(stmt, ast.Assign):
+            continue
+        if _dotted(stmt.value) != buf:
+            continue
+        for t in stmt.targets:
+            alias = _dotted(t)
+            if alias is None or alias == buf:
+                continue
+            for s2, _ in stmts:
+                if s2.lineno <= call_stmt.lineno:
+                    continue
+                reads = set(_loads_in(s2, alias)) | {
+                    n.lineno
+                    for e in _own_exprs(s2)
+                    for n in ast.walk(e)
+                    if isinstance(n, ast.Attribute)
+                    and isinstance(n.ctx, ast.Load)
+                    and (d := _dotted(n)) is not None
+                    and d.startswith(alias + ".")
+                }
+                for ln in sorted(reads):
+                    out.append((ln, (
+                        f"alias '{alias}' of donated buffer '{buf}' "
+                        f"(bound at line {stmt.lineno}) survives the "
+                        f"donating call at line {line}"
+                    )))
+
+    # -- closure capture (bare-name buffers only) ------------------------
+    if "." not in buf:
+        for nfn in nested:
+            if buf in _free_names(nfn):
+                name = getattr(nfn, "name", "<lambda>")
+                out.append((nfn.lineno, (
+                    f"donated buffer '{buf}' is captured by nested "
+                    f"closure '{name}' — the closure cell outlives the "
+                    f"donation at line {line}"
+                )))
+    return out

@@ -1,0 +1,148 @@
+"""Static event-protocol conformance pass (rule ``event-protocol``).
+
+The serving event API promises every stream the per-stream sequence
+
+    StreamAdmitted -> StreamThrottled* -> WindowDone* -> StreamDone
+
+(``docs/async_scheduler.md`` §Events; ``StreamThrottled`` may precede
+admission while the pool is full, never follow it).  Consumers —
+benches, the multi-tenant harness, downstream SLO accounting — key
+their bookkeeping off this order, so an emit site that can produce
+``WindowDone`` after ``StreamDone``, or a terminal ``StreamDone``
+with no window ever reported (unless it is the explicit zero-window
+form ``n_windows=0``), is a protocol bug even when today's scheduling
+happens not to trigger it.
+
+This pass checks the order of emit sites *statically, per function*:
+every ``<buffer>.append(<EventType>(...))`` call is collected in
+source order, grouped by the root name of the event's stream-id
+argument (``sess.sid`` and ``head.sid`` are different streams), and
+checked against the state machine.  The companion runtime checker is
+``repro.serving.events.EventProtocolValidator``, which tests and
+benches wrap around ``Scheduler.events()`` — the static pass catches
+re-ordered emit sites at review time, the validator catches dynamic
+orderings the per-function view cannot see.
+
+Waive a site with ``# check: allow-event-protocol(<reason>)``.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+RULE_EVENTS = "event-protocol"
+
+EVENT_TYPES = ("StreamAdmitted", "StreamThrottled", "WindowDone",
+               "StreamDone")
+
+
+@dataclass
+class _Emit:
+    kind: str
+    line: int
+    root: Optional[str]     # root name of the stream-id expression
+    call: ast.Call
+
+
+def _root_of(node: ast.AST) -> Optional[str]:
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _stream_id_root(call: ast.Call) -> Optional[str]:
+    for kw in call.keywords:
+        if kw.arg == "stream_id":
+            return _root_of(kw.value)
+    if call.args:
+        return _root_of(call.args[0])
+    return None
+
+
+def _n_windows_zero(call: ast.Call) -> bool:
+    for kw in call.keywords:
+        if kw.arg == "n_windows":
+            return isinstance(kw.value, ast.Constant) and kw.value.value == 0
+    return False
+
+
+def _emits_in(fn: ast.AST) -> List[_Emit]:
+    emits: List[_Emit] = []
+    for node in ast.walk(fn):
+        if not (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "append"
+            and node.args
+            and isinstance(node.args[0], ast.Call)
+        ):
+            continue
+        ev = node.args[0]
+        name = (
+            ev.func.id if isinstance(ev.func, ast.Name)
+            else ev.func.attr if isinstance(ev.func, ast.Attribute)
+            else None
+        )
+        if name in EVENT_TYPES:
+            emits.append(_Emit(name, ev.lineno, _stream_id_root(ev), ev))
+    emits.sort(key=lambda e: e.line)
+    return emits
+
+
+def analyze(tree: ast.Module, path: str) -> List[Tuple[int, str]]:
+    """-> findings as (line, message) tuples."""
+    findings: List[Tuple[int, str]] = []
+    funcs = [
+        n for n in ast.walk(tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    ]
+    for fn in funcs:
+        emits = _emits_in(fn)
+        if not emits:
+            continue
+        for i, e in enumerate(emits):
+            prior = [
+                p for p in emits[:i]
+                if p.root is not None and p.root == e.root
+            ]
+            kinds = [p.kind for p in prior]
+            if e.kind == "StreamDone":
+                if not _n_windows_zero(e.call) and "WindowDone" not in kinds:
+                    findings.append((e.line, (
+                        f"StreamDone emitted in {fn.name}() with no "
+                        f"preceding WindowDone for the same stream and a "
+                        f"non-constant-zero n_windows — a terminal event "
+                        f"must follow its windows or use the explicit "
+                        f"n_windows=0 zero-window form"
+                    )))
+                if "StreamDone" in kinds:
+                    findings.append((e.line, (
+                        f"duplicate StreamDone for the same stream in "
+                        f"{fn.name}() — StreamDone is terminal"
+                    )))
+            elif e.kind == "WindowDone":
+                if "StreamDone" in kinds:
+                    findings.append((e.line, (
+                        f"WindowDone emitted after StreamDone for the "
+                        f"same stream in {fn.name}() — no events may "
+                        f"follow the terminal StreamDone"
+                    )))
+            elif e.kind == "StreamAdmitted":
+                if "WindowDone" in kinds or "StreamDone" in kinds:
+                    findings.append((e.line, (
+                        f"StreamAdmitted emitted after progress events "
+                        f"for the same stream in {fn.name}() — admission "
+                        f"opens the per-stream sequence"
+                    )))
+            elif e.kind == "StreamThrottled":
+                if "StreamAdmitted" in kinds:
+                    findings.append((e.line, (
+                        f"StreamThrottled emitted after StreamAdmitted "
+                        f"for the same stream in {fn.name}() — throttle "
+                        f"events only precede admission"
+                    )))
+    return findings

@@ -1,7 +1,12 @@
 """AST tracing-hygiene lints.
 
-Three rules, each protecting an invariant the serving fast path relies
-on (see ``docs/static_analysis.md``):
+Three tracing rules, each protecting an invariant the serving fast
+path relies on (see ``docs/static_analysis.md``), plus three
+concurrency/aliasing passes delegated to sibling modules
+(``donation-linearity`` in :mod:`tools.check.donation`,
+``shared-state`` in :mod:`tools.check.concurrency`,
+``event-protocol`` in :mod:`tools.check.events_audit`) that share this
+module's waiver and reporting machinery:
 
 ``host-sync-under-jit``
     ``jax.device_get`` / ``np.asarray`` / ``.item()`` / ``float()`` on
@@ -45,7 +50,11 @@ RULE_HOST_SYNC = "host-sync-under-jit"
 RULE_RECOMPILE = "recompile-hazard"
 RULE_DTYPE = "dtype-promotion"
 RULE_STALE = "stale-waiver"
-ALL_RULES = (RULE_HOST_SYNC, RULE_RECOMPILE, RULE_DTYPE, RULE_STALE)
+RULE_DONATION = "donation-linearity"
+RULE_SHARED = "shared-state"
+RULE_EVENTS = "event-protocol"
+ALL_RULES = (RULE_HOST_SYNC, RULE_RECOMPILE, RULE_DTYPE, RULE_STALE,
+             RULE_DONATION, RULE_SHARED, RULE_EVENTS)
 
 # dispatch-adjacent host-sync enforcement is scoped to the serving hot
 # path; training / analysis / bench code legitimately syncs for logging
@@ -572,6 +581,26 @@ def collect_waivers(source: str) -> List[Waiver]:
     return out
 
 
+def _concurrency_findings(tree: ast.Module, path: str) -> List[Finding]:
+    """Run the donation / shared-state / event-protocol passes.
+
+    Imported lazily: the pass modules import :class:`Finding` helpers
+    from here, and keeping them out of module import time keeps
+    ``tools.check.lints`` importable in isolation."""
+    from . import concurrency, donation, events_audit
+
+    out: List[Finding] = []
+    d_findings, _sites = donation.analyze(tree, path)
+    out += [Finding(RULE_DONATION, path, ln, msg) for ln, msg in d_findings]
+    c_findings, _rows = concurrency.analyze(tree, path)
+    out += [Finding(RULE_SHARED, path, ln, msg) for ln, msg in c_findings]
+    out += [
+        Finding(RULE_EVENTS, path, ln, msg)
+        for ln, msg in events_audit.analyze(tree, path)
+    ]
+    return out
+
+
 def lint_source(source: str, path: str) -> List[Finding]:
     try:
         tree = ast.parse(source, filename=path)
@@ -588,6 +617,7 @@ def lint_source(source: str, path: str) -> List[Finding]:
     findings += _recompile_findings(idx, path, tree)
     if any(p in DTYPE_PATH_PARTS for p in parts):
         findings += _dtype_findings(idx, path, tree)
+    findings += _concurrency_findings(tree, path)
 
     waivers = collect_waivers(source)
     kept: List[Finding] = []
@@ -614,7 +644,7 @@ def lint_source(source: str, path: str) -> List[Finding]:
     return kept
 
 
-def lint_paths(paths: Sequence[str]) -> List[Finding]:
+def iter_py_files(paths: Sequence[str]) -> List[Path]:
     files: List[Path] = []
     for p in paths:
         pp = Path(p)
@@ -622,7 +652,11 @@ def lint_paths(paths: Sequence[str]) -> List[Finding]:
             files.extend(sorted(pp.rglob("*.py")))
         elif pp.suffix == ".py":
             files.append(pp)
+    return files
+
+
+def lint_paths(paths: Sequence[str]) -> List[Finding]:
     out: List[Finding] = []
-    for f in files:
+    for f in iter_py_files(paths):
         out.extend(lint_source(f.read_text(), str(f)))
     return out
